@@ -1,0 +1,89 @@
+"""Fleet benches: paper Figs. 5, 6, 18, 19, 20, 21 (+ per-fabric strategy).
+
+One pass over the synthetic fleet produces:
+  * fig5  — skew (fraction of commodities carrying 80% of traffic);
+  * fig6  — well-bounded fraction per fabric;
+  * fig18/19/20 — p99.9 MLU / ALU / OLR: Gemini (predicted strategy, online
+    controller) vs (Uniform, VLB), Same-cost Clos, Full Clos;
+  * fig21 — p99.9 stretch per fabric.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import FLEET_PARAMS, SCALE, cached
+from repro.core import ControllerConfig, SolverConfig, predict, run_controller
+from repro.core.baselines import clos_metrics, uniform_vlb_metrics
+from repro.core.fleet import make_fleet
+from repro.core.simulator import p999
+from repro.core.traffic import skew_fraction_for_share, well_bounded_fraction
+
+
+def _run():
+    p = FLEET_PARAMS[SCALE]
+    cc = ControllerConfig(routing_interval_hours=p["routing_interval_hours"],
+                          topology_interval_days=p["topology_interval_days"],
+                          aggregation_days=p["aggregation_days"],
+                          k_critical=p["k_critical"])
+    sc = SolverConfig(stage1_method="scaled")
+    rows = []
+    for spec, fabric, trace in make_fleet(days=p["days"],
+                                          interval_minutes=p["interval_minutes"],
+                                          n_fabrics=p["n_fabrics"]):
+        t0 = time.time()
+        train = trace.slice_days(0, p["days"] / 2)
+        test = trace.slice_days(p["days"] / 2, p["days"] / 2)
+        pred = predict(fabric, train, cc, sc)
+        res = run_controller(fabric, test, pred.strategy, cc, sc)
+        vlb = uniform_vlb_metrics(fabric, test)
+        clos2 = clos_metrics(fabric, test, 2.0)
+        clos1 = clos_metrics(fabric, test, 1.0)
+        rows.append({
+            "fabric": spec.name,
+            "pods": fabric.n_pods,
+            "skew80": skew_fraction_for_share(trace, 0.8),
+            "well_bounded": well_bounded_fraction(trace),
+            "strategy": pred.strategy.name,
+            "per_strategy": pred.per_strategy,
+            "gemini": {"mlu": p999(res.metrics.mlu), "alu": p999(res.metrics.alu),
+                       "olr": p999(res.metrics.olr),
+                       "stretch": p999(res.metrics.stretch)},
+            "vlb": {"mlu": p999(vlb.mlu), "alu": p999(vlb.alu),
+                    "olr": p999(vlb.olr), "stretch": p999(vlb.stretch)},
+            "clos2": {"mlu": p999(clos2.mlu), "alu": p999(clos2.alu),
+                      "olr": p999(clos2.olr), "stretch": 2.0},
+            "clos1": {"mlu": p999(clos1.mlu), "alu": p999(clos1.alu),
+                      "olr": p999(clos1.olr), "stretch": 2.0},
+            "routing_updates": res.n_routing_updates,
+            "topology_updates": res.n_topology_updates,
+            "solver_seconds": round(res.solver_seconds, 1),
+            "elapsed_s": round(time.time() - t0, 1),
+        })
+    # fleet-level aggregates (the paper's headline claims)
+    g = np.array([r["gemini"]["mlu"] for r in rows])
+    v = np.array([r["vlb"]["mlu"] for r in rows])
+    c2 = np.array([r["clos2"]["mlu"] for r in rows])
+    c1 = np.array([r["clos1"]["mlu"] for r in rows])
+    agg = {
+        "mlu_improvement_vs_vlb": float(np.mean((v - g) / np.maximum(v, 1e-9))),
+        "mlu_improvement_vs_clos2": float(np.mean((c2 - g) / np.maximum(c2, 1e-9))),
+        "frac_within_30pct_of_full_clos": float(np.mean(g <= c1 * 1.3)),
+        "frac_baseline_infeasible": float(np.mean((v > 1) | (c2 > 1))),
+        "frac_gemini_feasible": float(np.mean(g <= 1)),
+        "max_gemini_olr": float(max(r["gemini"]["olr"] for r in rows)),
+        "max_gemini_stretch": float(max(r["gemini"]["stretch"] for r in rows)),
+    }
+    return {"rows": rows, "aggregate": agg}
+
+
+def run(force: bool = False):
+    return cached("fleet", _run, force)
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run()["aggregate"], indent=2))

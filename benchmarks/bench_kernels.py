@@ -1,0 +1,97 @@
+"""Per-kernel microbenches (interpret mode on CPU — correctness-path timing
++ analytic TPU cost estimates; real TPU timing requires hardware)."""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import cached
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, reps=3):
+    fn()  # compile/warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _run():
+    rng = np.random.default_rng(0)
+    out = {}
+
+    # linkload: fused metrics vs numpy matmul baseline
+    from repro.kernels.linkload import ops as ll
+    t_, c_, e_ = 512, 132, 132
+    d = rng.gamma(2.0, 10.0, (t_, c_))
+    w = rng.random((c_, e_))
+    cap = rng.uniform(100, 900, e_)
+    out["linkload"] = {
+        "shape": f"T{t_}xC{c_}xE{e_}",
+        "interpret_s": _time(lambda: ll.link_metrics(d, w, cap, backend="pallas")),
+        "numpy_s": _time(lambda: ll.link_metrics(d, w, cap, backend="numpy")),
+        "tpu_est_us": 1e6 * max(2 * t_ * c_ * e_ / PEAK_FLOPS,
+                                (t_ * c_ + c_ * e_ + 4 * t_) * 4 / HBM_BW),
+    }
+
+    # flash attention
+    from repro.kernels.flash_attention import ops as fa
+    b, s, h, kv, hd = 1, 512, 8, 2, 128
+    q = jnp.asarray(rng.normal(0, 1, (b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, kv, hd)), jnp.float32)
+    flops = 4 * b * h * s * s * hd / 2  # causal
+    out["flash_attention"] = {
+        "shape": f"B{b}S{s}H{h}/{kv}D{hd}",
+        "interpret_s": _time(lambda: fa.flash_attention(q, k, v, backend="pallas")),
+        "xla_ref_s": _time(lambda: fa.flash_attention(q, k, v, backend="ref")),
+        "tpu_est_us": 1e6 * flops / PEAK_FLOPS,
+    }
+
+    # rglru scan
+    from repro.kernels.rglru_scan import ops as rl
+    a = jnp.asarray(rng.uniform(0.9, 0.999, (4, 1024, 256)), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 0.5, (4, 1024, 256)), jnp.float32)
+    bytes_moved = 3 * a.size * 4
+    out["rglru_scan"] = {
+        "shape": "B4S1024D256",
+        "interpret_s": _time(lambda: rl.rglru_scan(a, x, backend="pallas")),
+        "xla_ref_s": _time(lambda: rl.rglru_scan(a, x, backend="ref")),
+        "tpu_est_us": 1e6 * bytes_moved / HBM_BW,
+    }
+
+    # ssd chunk
+    from repro.kernels.ssd_chunk import ops as sd
+    B, H, S, P, N = 1, 4, 512, 64, 128
+    xs = jnp.asarray(rng.normal(0, 1, (B, H, S, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, H, S, 1)), jnp.float32)
+    av = jnp.asarray(-rng.uniform(1, 8, (H, 1, 1, 1)), jnp.float32)
+    bm = jnp.asarray(rng.normal(0, 1, (B, 1, S, N)), jnp.float32)
+    cm = jnp.asarray(rng.normal(0, 1, (B, 1, S, N)), jnp.float32)
+    q = 128
+    flops = B * H * (S / q) * (2 * q * q * N + 2 * q * q * P + 2 * q * N * P * 2)
+    out["ssd_chunk"] = {
+        "shape": f"B{B}H{H}S{S}P{P}N{N}",
+        "interpret_s": _time(lambda: sd.ssd_scan(xs, dt, av, bm, cm, q, backend="pallas")),
+        "xla_ref_s": _time(lambda: sd.ssd_scan(xs, dt, av, bm, cm, q, backend="ref")),
+        "tpu_est_us": 1e6 * flops / PEAK_FLOPS,
+    }
+    return out
+
+
+def run(force: bool = False):
+    return cached("kernels", _run, force)
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=2))

@@ -1,0 +1,76 @@
+"""Prediction-quality bench: paper Figs. 22 / 23 / 24.
+
+Rolling windows: for each fabric and each (train-window → test-window) pair,
+the Predictor's choice is compared against the hindsight-optimal strategy
+(the one that actually minimizes the operator objective on the test window).
+Reports accuracy (Fig. 22), benefit of correct predictions (Fig. 23), and
+misprediction cost (Fig. 24).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import FLEET_PARAMS, SCALE, cached
+from repro.core import (STRATEGIES, ControllerConfig, SolverConfig, pick_best,
+                        predict, run_controller)
+from repro.core.fleet import make_fleet
+
+
+def _run():
+    p = FLEET_PARAMS[SCALE]
+    cc = ControllerConfig(routing_interval_hours=p["routing_interval_hours"],
+                          topology_interval_days=p["topology_interval_days"],
+                          aggregation_days=p["aggregation_days"],
+                          k_critical=p["k_critical"])
+    sc = SolverConfig(stage1_method="scaled")
+    win = p["days"] / 2
+    rows = []
+    for spec, fabric, trace in make_fleet(days=p["days"],
+                                          interval_minutes=p["interval_minutes"],
+                                          n_fabrics=max(4, p["n_fabrics"] // 2)):
+        train = trace.slice_days(0, win)
+        test = trace.slice_days(win, win)
+        pred = predict(fabric, train, cc, sc)
+        # hindsight: run every strategy on the test window
+        per_test = {}
+        for strat in STRATEGIES:
+            res = run_controller(fabric, test, strat, cc, sc)
+            per_test[strat.name] = res.summary
+        optimal = pick_best(per_test, cushion=0.05)
+        chosen = pred.strategy.name
+        rows.append({
+            "fabric": spec.name,
+            "chosen": chosen,
+            "optimal": optimal,
+            "correct": chosen == optimal,
+            "chosen_mlu": per_test[chosen]["p999_mlu"],
+            "optimal_mlu": per_test[optimal]["p999_mlu"],
+            "chosen_alu": per_test[chosen]["p999_alu"],
+            "optimal_alu": per_test[optimal]["p999_alu"],
+            "worst_mlu": max(s["p999_mlu"] for s in per_test.values()),
+        })
+    correct = [r for r in rows if r["correct"]]
+    wrong = [r for r in rows if not r["correct"]]
+    agg = {
+        "accuracy": len(correct) / max(len(rows), 1),
+        # Fig. 23: benefit — chosen vs the WORST strategy (range of improvement)
+        "mean_benefit_vs_worst": float(np.mean(
+            [(r["worst_mlu"] - r["chosen_mlu"]) / max(r["worst_mlu"], 1e-9)
+             for r in rows])) if rows else 0.0,
+        # Fig. 24: misprediction cost (MLU increase over hindsight-optimal)
+        "max_mispredict_mlu_increase": float(max(
+            [(r["chosen_mlu"] - r["optimal_mlu"]) / max(r["optimal_mlu"], 1e-9)
+             for r in wrong], default=0.0)),
+    }
+    return {"rows": rows, "aggregate": agg}
+
+
+def run(force: bool = False):
+    return cached("prediction", _run, force)
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run()["aggregate"], indent=2))

@@ -1,0 +1,106 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Per (arch × shape × mesh): the three roofline terms in seconds,
+  compute    = per-chip HLO FLOPs / 197 TFLOP/s (bf16)
+  memory     = per-chip HBM bytes / 819 GB/s
+  collective = per-chip wire bytes / 50 GB/s (ICI link)
+the dominant term, MODEL_FLOPS (6·N·D train / 2·N·tokens decode), the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs, and the roofline fraction
+(MODEL_FLOPS-at-peak time / dominant-term time — the score the perf loop
+drives up).  Multi-pod cells additionally report the inter-pod (DCNI) traffic
+and the Gemini-optimized DCNI collective term (§Perf).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DRYRUN = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,  # one token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(rec: dict) -> float:
+    n_active = rec["model_params_active"]
+    toks = SHAPE_TOKENS[rec["shape"]]
+    if rec["shape"] == "train_4k":
+        return 6.0 * n_active * toks
+    return 2.0 * n_active * toks  # prefill/decode forward-only
+
+
+def load_cells(tagged: bool = False) -> list:
+    rows = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        parts = f.stem.split("__")
+        has_tag = len(parts) > 3
+        if has_tag != tagged:
+            continue
+        rec = json.loads(f.read_text())
+        if rec["status"] != "ok":
+            continue
+        n_dev = rec["n_devices"]
+        compute_s = rec["flops"] / PEAK_FLOPS
+        # memory bounds: floor = resident working set crosses HBM ≥ once;
+        # ceiling = analyzer traffic (pessimistic: CPU-backend fusion is
+        # weaker than TPU's, so unfused elementwise chains inflate it)
+        ma = rec["memory_analysis"]
+        mem_lo_bytes = ma["argument_bytes"] + ma["output_bytes"] + ma["temp_bytes"]
+        mem_lo_s = mem_lo_bytes / HBM_BW
+        mem_hi_s = rec["hbm_bytes"] / HBM_BW
+        coll_s = rec["collectives"]["total_wire_bytes_per_chip"] / LINK_BW
+        terms = {"compute": compute_s, "memory": mem_hi_s, "collective": coll_s}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(rec)
+        # ideal time: perfect implementation still needs the model's FLOPs and
+        # one pass over the working set, on the faster of the two units
+        ideal_s = max(mf / n_dev / PEAK_FLOPS, mem_lo_s)
+        bound_s = max(terms.values())
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "tag": parts[3] if has_tag else "",
+            "compute_s": compute_s, "memory_s": mem_hi_s,
+            "memory_lo_s": mem_lo_s, "collective_s": coll_s,
+            "dominant": dominant,
+            "model_flops": mf,
+            "useful_ratio": mf / max(rec["flops"] * n_dev, 1e-9),
+            "roofline_fraction": ideal_s / max(bound_s, 1e-12),
+            "interpod_bytes": float(np.asarray(rec["pod_tm_bytes"]).sum()),
+        })
+    return rows
+
+
+def table(rows: list, mesh: str = "16x16") -> str:
+    out = [f"{'arch':24s} {'shape':12s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'dominant':>10s} {'MF/HLO':>7s} {'roofline':>9s}"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        out.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:9.4f} "
+            f"{r['memory_s']:9.4f} {r['collective_s']:9.4f} {r['dominant']:>10s} "
+            f"{r['useful_ratio']:7.3f} {r['roofline_fraction']:9.4f}")
+    return "\n".join(out)
+
+
+def run(force: bool = False):
+    rows = load_cells()
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    rows = load_cells()
+    print(table(rows, "16x16"))
+    print()
+    print(table(rows, "2x16x16"))

@@ -1,0 +1,80 @@
+"""Sensitivity analyses: paper Figs. 25 (routing interval r), 26 (topology
+interval t), 27 (number of critical TMs k), 28 (aggregation window w).
+Run on a few representative fabrics (one predictable, one skewed, one
+volatile), (Non-uniform, hedge) strategy as in the paper."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import FLEET_PARAMS, SCALE, cached
+from repro.core import ControllerConfig, SolverConfig, Strategy, run_controller
+from repro.core.fleet import FLEET_SPECS, make_fabric, make_trace
+
+
+FABRICS = ["F17", "F9", "F16"]  # predictable / mid / volatile (small-V,
+# so the (nonuniform, hedge) risk bisections stay cheap on 1 CPU core)
+
+
+def _metrics(fabric, trace, cc):
+    sc = SolverConfig(stage1_method="scaled", bisect_tol=5e-3, bisect_max_iters=14)
+    res = run_controller(fabric, trace, Strategy(True, True), cc, sc)
+    return {"mlu": res.summary["p999_mlu"], "alu": res.summary["p999_alu"]}
+
+
+def _run():
+    p = FLEET_PARAMS[SCALE]
+    days = p["days"]
+    out = {"fig25_routing_interval": {}, "fig26_topology_interval": {},
+           "fig27_k_critical": {}, "fig28_aggregation_window": {}}
+    base = dict(routing_interval_hours=p["routing_interval_hours"],
+                topology_interval_days=p["topology_interval_days"],
+                aggregation_days=p["aggregation_days"],
+                k_critical=p["k_critical"])
+    for name in FABRICS:
+        spec = next(s for s in FLEET_SPECS if s.name == name)
+        fabric = make_fabric(spec)
+        trace = make_trace(spec, fabric, days=days,
+                           interval_minutes=p["interval_minutes"])
+        for r in ([6.0, 24.0] if SCALE == "smoke" else [2.0, 8.0, 24.0]):
+            cc = ControllerConfig(**{**base, "routing_interval_hours": r})
+            out["fig25_routing_interval"].setdefault(name, {})[f"r={r}h"] = \
+                _metrics(fabric, trace, cc)
+        for t in ([1.0, 4.0] if SCALE == "smoke" else [1.0, 7.0, 14.0]):
+            cc = ControllerConfig(**{**base, "topology_interval_days": t})
+            out["fig26_topology_interval"].setdefault(name, {})[f"t={t}d"] = \
+                _metrics(fabric, trace, cc)
+        for k in [1, 4, 12]:
+            cc = ControllerConfig(**{**base, "k_critical": k})
+            out["fig27_k_critical"].setdefault(name, {})[f"k={k}"] = \
+                _metrics(fabric, trace, cc)
+        for w in ([1.0, 2.0, 4.0] if SCALE == "smoke" else [1.0, 3.0, 7.0]):
+            cc = ControllerConfig(**{**base, "aggregation_days": w})
+            out["fig28_aggregation_window"].setdefault(name, {})[f"w={w}d"] = \
+                _metrics(fabric, trace, cc)
+
+    # paper-claim checks
+    def spread(fig):
+        vals = []
+        for fab in out[fig].values():
+            mlus = [v["mlu"] for v in fab.values()]
+            vals.append((max(mlus) - min(mlus)) / max(max(mlus), 1e-9))
+        return float(np.mean(vals))
+
+    out["aggregate"] = {
+        "topology_interval_mlu_spread": spread("fig26_topology_interval"),
+        "k_mlu_gain_1_to_12": float(np.mean([
+            (fab["k=1"]["mlu"] - fab["k=12"]["mlu"]) / max(fab["k=1"]["mlu"], 1e-9)
+            for fab in out["fig27_k_critical"].values()])),
+    }
+    return out
+
+
+def run(force: bool = False):
+    return cached("sensitivity", _run, force)
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run()["aggregate"], indent=2))

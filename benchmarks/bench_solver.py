@@ -1,0 +1,91 @@
+"""Solver benches: stage timings (scipy scaled vs paper bisection vs JAX
+PDHG), scaling vs pod count, and the rounding/panel realization cost.
+Analog of the paper's "Scaling the solver" discussion (§4.5)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import cached
+from repro.core import SolverConfig, Strategy, critical_tms, solve
+from repro.core.graph import Fabric, uniform_topology
+from repro.core.jaxlp import JaxRoutingSolver
+from repro.core.lp import LpBuilder
+from repro.core.paths import build_paths
+from repro.core.rounding import realize
+
+
+def _fabric(v):
+    return Fabric.homogeneous(f"bench{v}", v, radix=4 * (v - 1), speed=100.0)
+
+
+def _window(v, seed=0):
+    rng = np.random.default_rng(seed)
+    mass = rng.lognormal(0, 1.0, v)
+    base = np.outer(mass, mass)
+    flat = np.array([base[i, j] for i in range(v) for j in range(v) if i != j])
+    t = 64
+    return flat[None, :] * rng.gamma(3.0, 1.0, (t, 1)) * \
+        rng.lognormal(0, 0.2, (t, flat.shape[0]))
+
+
+def _time(fn, reps=3):
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _run():
+    out = {"stage1_joint": {}, "routing_backends": {}, "realization": {}}
+    for v in (6, 10, 14):
+        fab = _fabric(v)
+        window = _window(v)
+        # scale demand to ~60% of pod capacity
+        cap = fab.pod_capacity()[0]
+        window *= 0.6 * cap / window.sum(axis=1).max() * (v - 1) / v
+        tms = critical_tms(window, k=6)
+        t_scaled = _time(lambda: solve(fab, tms, Strategy(True, False),
+                                       SolverConfig(stage1_method="scaled",
+                                                    skip_stage3=True)))
+        t_bisect = _time(lambda: solve(fab, tms, Strategy(True, False),
+                                       SolverConfig(stage1_method="bisect",
+                                                    skip_stage3=True)), reps=1)
+        out["stage1_joint"][f"V={v}"] = {
+            "scaled_lp_s": round(t_scaled, 3),
+            "paper_bisect_s": round(t_bisect, 3),
+            "speedup": round(t_bisect / max(t_scaled, 1e-9), 1),
+        }
+        # routing-only backends (the Controller's 15-min hot path)
+        caps = fab.capacities(uniform_topology(fab))
+        builder = LpBuilder(fab, build_paths(v), tms)
+        js = JaxRoutingSolver(fab, tms.shape[0], max_iters=2000)
+        js.solve_mlu(tms, caps)  # compile once
+        t_scipy = _time(lambda: builder.solve_stage1_fixed_topology(caps))
+        t_pdhg = _time(lambda: js.solve_mlu(tms, caps))
+        u_s = builder.solve_stage1_fixed_topology(caps).scalar
+        _, u_p = js.solve_mlu(tms, caps)
+        out["routing_backends"][f"V={v}"] = {
+            "scipy_highs_s": round(t_scipy, 4),
+            "jax_pdhg_warm_s": round(t_pdhg, 4),
+            "mlu_gap_pct": round(100 * abs(u_p - u_s) / max(u_s, 1e-9), 3),
+        }
+        sol = solve(fab, tms, Strategy(True, False),
+                    SolverConfig(stage1_method="scaled"))
+        t_real = _time(lambda: realize(fab, sol.n_e))
+        out["realization"][f"V={v}"] = {"round_and_fill_s": round(t_real, 4)}
+    return out
+
+
+def run(force: bool = False):
+    return cached("solver", _run, force)
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=2))

@@ -1,0 +1,39 @@
+"""Shared bench plumbing: scales, result caching, CSV emission."""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+RESULTS.mkdir(parents=True, exist_ok=True)
+
+# smoke: minutes on 1 CPU core. paper: the full fleet study (background run).
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "smoke")
+
+FLEET_PARAMS = {
+    "smoke": dict(n_fabrics=6, days=10.0, interval_minutes=60.0,
+                  routing_interval_hours=6.0, topology_interval_days=2.0,
+                  aggregation_days=2.0, k_critical=6),
+    "paper": dict(n_fabrics=22, days=14.0, interval_minutes=60.0,
+                  routing_interval_hours=6.0, topology_interval_days=3.5,
+                  aggregation_days=3.5, k_critical=12),
+}
+
+
+def cached(name: str, fn, force: bool = False):
+    path = RESULTS / f"{name}__{SCALE}.json"
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+    t0 = time.time()
+    out = fn()
+    out["_elapsed_s"] = round(time.time() - t0, 1)
+    path.write_text(json.dumps(out, indent=2))
+    return out
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """Scaffold contract: ``name,us_per_call,derived`` CSV on stdout."""
+    print(f"{name},{us_per_call:.1f},{derived}")

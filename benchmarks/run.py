@@ -1,0 +1,140 @@
+"""Benchmark entry point: one bench per paper table/figure + roofline/solver/
+kernels.  Prints ``name,us_per_call,derived`` CSV lines (scaffold contract).
+
+    PYTHONPATH=src python -m benchmarks.run            # smoke scale
+    REPRO_BENCH_SCALE=paper PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCALE, emit
+
+
+def main() -> None:
+    print(f"# repro benchmarks (scale={SCALE})")
+    print("name,us_per_call,derived")
+
+    # ---- fleet: Figs 5/6/18/19/20/21 ----------------------------------------
+    from benchmarks import bench_fleet
+
+    fl = bench_fleet.run()
+    rows, agg = fl["rows"], fl["aggregate"]
+    solver_us = 1e6 * float(np.mean([r["solver_seconds"] / max(
+        r["routing_updates"], 1) for r in rows]))
+    emit("fig5_skew", 0.0,
+         f"median skew80={np.median([r['skew80'] for r in rows]):.2f}")
+    emit("fig6_boundedness", 0.0,
+         f"frac mostly-bounded={np.mean([r['well_bounded'] > 0.9 for r in rows]):.2f}")
+    emit("fig18_p999_mlu", solver_us,
+         f"gemini_vs_vlb_improvement={agg['mlu_improvement_vs_vlb']:.2f};"
+         f"vs_clos2={agg['mlu_improvement_vs_clos2']:.2f};"
+         f"within30pct_full_clos={agg['frac_within_30pct_of_full_clos']:.2f}")
+    emit("fig19_p999_alu", solver_us,
+         f"max_gemini_alu={max(r['gemini']['alu'] for r in rows):.3f}")
+    emit("fig20_p999_olr", solver_us,
+         f"max_gemini_olr={agg['max_gemini_olr']:.4f}")
+    emit("fig21_stretch", solver_us,
+         f"max_gemini_stretch={agg['max_gemini_stretch']:.3f}")
+
+    # ---- prediction quality: Figs 22/23/24 -----------------------------------
+    from benchmarks import bench_prediction
+
+    pr = bench_prediction.run()["aggregate"]
+    emit("fig22_prediction_accuracy", 0.0, f"accuracy={pr['accuracy']:.2f}")
+    emit("fig23_correct_benefit", 0.0,
+         f"mean_benefit_vs_worst={pr['mean_benefit_vs_worst']:.2f}")
+    emit("fig24_mispredict_cost", 0.0,
+         f"max_mlu_increase={pr['max_mispredict_mlu_increase']:.2f}")
+
+    # ---- sensitivity: Figs 25–28 ---------------------------------------------
+    from benchmarks import bench_sensitivity
+
+    full_se = bench_sensitivity.run()
+    se = full_se["aggregate"]
+
+    def _spread(fig):
+        import numpy as _np
+        vals = []
+        for fab in full_se[fig].values():
+            mlus = [v["mlu"] for v in fab.values()]
+            vals.append((max(mlus) - min(mlus)) / max(max(mlus), 1e-9))
+        return float(_np.mean(vals))
+
+    emit("fig25_routing_interval", 0.0, f"mlu_spread={_spread('fig25_routing_interval'):.3f}")
+    emit("fig26_topology_interval", 0.0,
+         f"mlu_spread={se['topology_interval_mlu_spread']:.3f}")
+    emit("fig27_critical_tms", 0.0,
+         f"k1_to_k12_mlu_gain={se['k_mlu_gain_1_to_12']:.3f}")
+    emit("fig28_aggregation_window", 0.0,
+         f"mlu_spread={_spread('fig28_aggregation_window'):.3f}")
+
+    # ---- solver + realization ------------------------------------------------
+    from benchmarks import bench_solver
+
+    so = bench_solver.run()
+    big = so["stage1_joint"]["V=14"]
+    emit("solver_stage1_joint_V14", big["scaled_lp_s"] * 1e6,
+         f"paper_bisect_speedup={big['speedup']}x")
+    rb = so["routing_backends"]["V=14"]
+    emit("solver_routing_pdhg_V14", rb["jax_pdhg_warm_s"] * 1e6,
+         f"scipy={rb['scipy_highs_s']*1e6:.0f}us;gap={rb['mlu_gap_pct']}%")
+
+    # ---- kernels ------------------------------------------------------------
+    from benchmarks import bench_kernels
+
+    kn = bench_kernels.run()
+    for name, k in kn.items():
+        if name.startswith("_"):
+            continue
+        emit(f"kernel_{name}", k["interpret_s"] * 1e6,
+             f"shape={k['shape']};tpu_est_us={k['tpu_est_us']:.1f}")
+
+    # ---- Gemini on measured ML-fleet traffic -----------------------------------
+    try:
+        from benchmarks import bench_ml_fabric
+
+        mf = bench_ml_fabric.run()
+        emit("ml_fabric_gemini_vs_baselines", 0.0,
+             f"gemini={mf['gemini_p999_mlu']:.3f};vlb={mf['vlb_p999_mlu']:.3f};"
+             f"clos2={mf['clos2_p999_mlu']:.3f};strategy={mf['strategy']}")
+    except FileNotFoundError:
+        emit("ml_fabric_gemini_vs_baselines", 0.0, "needs multi-pod dryrun first")
+
+    # ---- roofline (from dry-run artifacts) ------------------------------------
+    from benchmarks import bench_roofline
+
+    rows = bench_roofline.load_cells()
+    if rows:
+        single = [r for r in rows if r["mesh"] == "16x16"]
+        worst = min(single, key=lambda r: r["roofline_fraction"])
+        best = max(single, key=lambda r: r["roofline_fraction"])
+        emit("roofline_cells", 0.0,
+             f"n={len(rows)};best={best['arch']}/{best['shape']}"
+             f"@{best['roofline_fraction']:.3f};"
+             f"worst={worst['arch']}/{worst['shape']}"
+             f"@{worst['roofline_fraction']:.3f}")
+        n_coll = sum(r["dominant"] == "collective" for r in single)
+        emit("roofline_dominant", 0.0,
+             f"collective_bound={n_coll}/{len(single)} single-pod cells")
+        # §Perf hillclimb variants (tagged cells)
+        tagged = bench_roofline.load_cells(tagged=True)
+        base_by = {(r["arch"], r["shape"], r["mesh"]): r for r in rows}
+        for hc in [("qwen3-14b", "train_4k", "16x16", "v_mb1"),
+                   ("mixtral-8x7b", "prefill_32k", "16x16", "v_sorted"),
+                   ("mamba2-130m", "prefill_32k", "16x16", "v_q512"),
+                   ("mixtral-8x7b", "train_4k", "2x16x16", "v_sorted")]:
+            arch, shape, mesh, tag = hc
+            var = next((r for r in tagged if (r["arch"], r["shape"], r["mesh"],
+                                              r["tag"]) == hc), None)
+            base = base_by.get((arch, shape, mesh))
+            if var and base:
+                b0 = max(base["compute_s"], base["memory_s"], base["collective_s"])
+                b1 = max(var["compute_s"], var["memory_s"], var["collective_s"])
+                emit(f"perf_{arch}_{shape}_{tag}", 0.0,
+                     f"bound {b0:.2f}s->{b1:.2f}s ({b0/max(b1,1e-9):.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Batched-request serving example: thin wrapper over repro.launch.serve.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch mixtral-8x7b
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if "--requests" not in " ".join(sys.argv):
+        sys.argv += ["--requests", "8", "--batch", "4",
+                     "--prompt-len", "16", "--gen-len", "16"]
+    main()

@@ -1,0 +1,21 @@
+"""Gemini core: joint topology + traffic engineering for reconfigurable
+inter-pod (DCNI) networks — the paper's contribution, plus its physical
+realization (rounding, patch panels), traffic modeling, online controller,
+predictor, simulator, and demand-oblivious baselines."""
+
+from repro.core.graph import Fabric, uniform_topology
+from repro.core.paths import PathSet, build_paths, routing_weight_matrix
+from repro.core.traffic import Trace
+from repro.core.clustering import critical_tms
+from repro.core.solver import STRATEGIES, GeminiSolution, SolverConfig, Strategy, solve
+from repro.core.simulator import IntervalMetrics, route_metrics, summarize
+from repro.core.controller import ControllerConfig, ControllerResult, run_controller
+from repro.core.predictor import Prediction, pick_best, predict
+
+__all__ = [
+    "Fabric", "uniform_topology", "PathSet", "build_paths",
+    "routing_weight_matrix", "Trace", "critical_tms", "STRATEGIES",
+    "GeminiSolution", "SolverConfig", "Strategy", "solve", "IntervalMetrics",
+    "route_metrics", "summarize", "ControllerConfig", "ControllerResult",
+    "run_controller", "Prediction", "pick_best", "predict",
+]

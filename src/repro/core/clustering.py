@@ -1,0 +1,87 @@
+"""Critical traffic matrices via clustering (paper §4.3, following [42]).
+
+Gemini abstracts an aggregation window's TMs into ``k`` *critical TMs*:
+k-means cluster the TMs, then take the element-wise maximum of each cluster.
+The critical TMs are extrema of an approximate convex hull that *contains*
+the original hull (Fig. 12) — any TM in the window is dominated by (≤) some
+convex combination of critical TMs, so a routing/topology feasible for all
+critical TMs is feasible for every observed TM.  ``k = 1`` degenerates to the
+paper's Maximal-TM.
+
+k-means is implemented in JAX (jit, fori_loop) — it runs thousands of times in
+fleet benches — with deterministic k-means++ style seeding on a numpy RNG.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["critical_tms", "kmeans", "hull_contains"]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def _kmeans_body(x: jax.Array, init: jax.Array, k: int, iters: int):
+    """Lloyd iterations; returns (centroids, assignment)."""
+
+    def step(_, cents):
+        d2 = ((x[:, None, :] - cents[None, :, :]) ** 2).sum(-1)  # (T, k)
+        assign = jnp.argmin(d2, axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)  # (T, k)
+        counts = onehot.sum(0)  # (k,)
+        sums = onehot.T @ x  # (k, C)
+        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1), cents)
+        return new
+
+    cents = jax.lax.fori_loop(0, iters, step, init)
+    d2 = ((x[:, None, :] - cents[None, :, :]) ** 2).sum(-1)
+    return cents, jnp.argmin(d2, axis=1)
+
+
+def kmeans(x: np.ndarray, k: int, iters: int = 25, seed: int = 0):
+    """k-means with greedy farthest-point init. Returns (centroids, assign)."""
+    x = np.asarray(x, dtype=np.float64)
+    t = x.shape[0]
+    k = min(k, t)
+    rng = np.random.default_rng(seed)
+    # farthest-point (k-means++ flavoured, deterministic given seed)
+    first = int(rng.integers(t))
+    centers = [first]
+    d2 = ((x - x[first]) ** 2).sum(-1)
+    for _ in range(k - 1):
+        nxt = int(np.argmax(d2))
+        centers.append(nxt)
+        d2 = np.minimum(d2, ((x - x[nxt]) ** 2).sum(-1))
+    init = jnp.asarray(x[centers])
+    cents, assign = _kmeans_body(jnp.asarray(x), init, k, iters)
+    return np.asarray(cents), np.asarray(assign)
+
+
+def critical_tms(demand: np.ndarray, k: int = 12, iters: int = 25, seed: int = 0) -> np.ndarray:
+    """Compute ``k`` critical TMs (element-wise cluster maxima) of a (T, C)
+    window.  Returns ``(k', C)`` with ``k' ≤ k`` (empty clusters dropped,
+    duplicate criticals merged)."""
+    demand = np.asarray(demand, dtype=np.float64)
+    if demand.ndim != 2 or demand.shape[0] == 0:
+        raise ValueError("demand must be a non-empty (T, C) array")
+    k = max(1, min(k, demand.shape[0]))
+    if k == 1:
+        return demand.max(axis=0, keepdims=True)
+    _, assign = kmeans(demand, k, iters, seed)
+    crit = []
+    for c in range(k):
+        m = assign == c
+        if m.any():
+            crit.append(demand[m].max(axis=0))
+    crit = np.unique(np.asarray(crit), axis=0)
+    return crit
+
+
+def hull_contains(critical: np.ndarray, tm: np.ndarray) -> bool:
+    """True if ``tm`` is element-wise dominated by the element-wise max of the
+    critical TMs — the (sufficient) containment property the model guarantees
+    for every TM of its own window."""
+    return bool((tm <= critical.max(axis=0) + 1e-9).all())

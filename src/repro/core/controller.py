@@ -1,0 +1,158 @@
+"""Online Controller (paper §4.6, Fig. 10): periodic routing reconfiguration
+every ``routing_interval``, optional topology reconfiguration every
+``topology_interval``, both computed from a sliding ``aggregation_window`` of
+recent TMs abstracted into ``k`` critical TMs.
+
+The controller walks a trace chronologically; the first aggregation window is
+warm-up (used to produce the initial configuration), and metrics are reported
+from the end of warm-up onward.  Topologies are *physically realized*
+(fractional trunks rounded via paper Algorithm 1, §A) before being scored, so
+rounding effects are part of every reported number.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import clustering
+from repro.core.graph import Fabric, uniform_topology
+from repro.core.paths import build_paths, routing_weight_matrix
+from repro.core.rounding import realize
+from repro.core.simulator import IntervalMetrics, route_metrics, summarize
+from repro.core.solver import GeminiSolution, SolverConfig, Strategy, solve
+from repro.core.traffic import Trace
+
+__all__ = ["ControllerConfig", "ControllerResult", "run_controller"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    routing_interval_hours: float = 0.25  # paper default: 15 minutes
+    topology_interval_days: float = 1.0  # paper default: 1 day (monthly suffices)
+    aggregation_days: float = 7.0  # paper default: one week
+    k_critical: int = 12
+    realize_topology: bool = True
+    overload_threshold: float = 0.8
+    backend: str = "numpy"  # metrics backend: numpy | jax | pallas
+
+
+@dataclasses.dataclass
+class ControllerResult:
+    strategy: Strategy
+    metrics: IntervalMetrics
+    summary: dict
+    n_routing_updates: int
+    n_topology_updates: int
+    final_topology: np.ndarray  # integer trunks if realized
+    transit_fraction: float
+    solver_seconds: float
+
+
+def _window(trace: Trace, end: int, n: int) -> np.ndarray:
+    return trace.demand[max(0, end - n) : end]
+
+
+def run_controller(
+    fabric: Fabric,
+    trace: Trace,
+    strategy: Strategy,
+    cc: ControllerConfig | None = None,
+    sc: SolverConfig | None = None,
+) -> ControllerResult:
+    cc = cc or ControllerConfig()
+    sc = sc or SolverConfig()
+    paths = build_paths(fabric.n_pods)
+    ipd = trace.intervals_per_day()
+    agg = max(1, int(round(cc.aggregation_days * ipd)))
+    route_step = max(1, int(round(cc.routing_interval_hours * ipd / 24.0)))
+    topo_step = max(route_step, int(round(cc.topology_interval_days * ipd)))
+    if trace.n_intervals <= agg:
+        raise ValueError("trace shorter than the aggregation window")
+
+    metrics = IntervalMetrics.empty()
+    n_routing, n_topology, solver_s = 0, 0, 0.0
+    transit_mass, transit_n = 0.0, 0
+
+    sol: GeminiSolution | None = None
+    n_realized: np.ndarray | None = None
+    cap: np.ndarray | None = None
+    next_topo = agg  # reconfigure topology at warm-up end, then every topo_step
+
+    fixed = Strategy(nonuniform=False, hedging=strategy.hedging)
+    for start in range(agg, trace.n_intervals, route_step):
+        window = _window(trace, start, agg)
+        tms = clustering.critical_tms(window, k=cc.k_critical, seed=n_routing)
+        if strategy.nonuniform and (sol is None or start >= next_topo):
+            # full joint solve: new topology + routing
+            sol = solve(fabric, tms, strategy, sc, window_demand=window)
+            solver_s += sol.solve_seconds
+            n_realized = realize(fabric, sol.n_e)[0] if cc.realize_topology else sol.n_e
+            cap = fabric.capacities(n_realized)
+            n_topology += 1
+            next_topo = start + topo_step
+            # routing must target the *realized* (integer) capacities
+            sol = _solve_routing_only(fabric, tms, fixed, sc, window, cap)
+            solver_s += sol.solve_seconds
+        else:
+            if cap is None:
+                # uniform strategies: fix the (realized) uniform topology once
+                n0 = uniform_topology(fabric)
+                n_realized = realize(fabric, n0)[0] if cc.realize_topology else n0
+                cap = fabric.capacities(n_realized)
+            # routing-only re-solve on the current realized topology
+            sol = _solve_routing_only(fabric, tms, fixed, sc, window, cap)
+            solver_s += sol.solve_seconds
+        n_routing += 1
+        transit_mass += sol.transit_fraction(paths)
+        transit_n += 1
+
+        w = routing_weight_matrix(paths, sol.f)
+        block = trace.demand[start : start + route_step]
+        metrics = metrics.concat(
+            route_metrics(block, w, cap, cc.overload_threshold, backend=cc.backend))
+
+    return ControllerResult(
+        strategy=strategy,
+        metrics=metrics,
+        summary=summarize(metrics),
+        n_routing_updates=n_routing,
+        n_topology_updates=n_topology,
+        final_topology=np.asarray(n_realized),
+        transit_fraction=transit_mass / max(transit_n, 1),
+        solver_seconds=solver_s,
+    )
+
+
+def _solve_routing_only(fabric, tms, strategy, sc, window, capacities) -> GeminiSolution:
+    """Fixed-capacity routing re-solve (stages 1 → [2] → 3 with C given)."""
+    import time
+
+    from repro.core.lp import LpBuilder, estimate_delta
+
+    t0 = time.perf_counter()
+    paths = build_paths(fabric.n_pods)
+    delta = 0.0
+    if strategy.hedging:
+        delta = sc.delta if sc.delta is not None else estimate_delta(window, sc.delta_quantile)
+    b = LpBuilder(fabric, paths, tms, delta=delta)
+    res1 = b.solve_stage1_fixed_topology(capacities)
+    if not res1.ok:
+        raise RuntimeError(f"routing stage 1 failed on {fabric.name}")
+    u_star, f = float(res1.scalar), res1.f
+    r_star = None
+    if strategy.hedging and delta > 0:
+        res2 = b.solve_stage2_fixed_topology(capacities, u_star * 1.005 + 1e-9)
+        if res2.ok:
+            r_star, f = float(res2.scalar), res2.f
+    if not sc.skip_stage3:
+        res3 = b.solve_stage3(u_star * 1.005 + 1e-9,
+                              None if r_star is None else r_star * 1.005 + 1e-12,
+                              capacities)
+        if res3.ok:
+            f = res3.f
+    return GeminiSolution(
+        strategy=strategy, fabric=fabric, n_e=np.zeros(fabric.n_trunks), f=f,
+        u_star=u_star, r_star=r_star, delta=delta,
+        solve_seconds=time.perf_counter() - t0, stage_times={})

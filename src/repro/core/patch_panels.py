@@ -1,0 +1,204 @@
+"""Physical realization, part 2: patch-panel assignment (paper §A, Thm. 4).
+
+Theorem 4: if every pod's (realized) degree is ``2^k``, any integer trunk
+topology can be built from ``2^p`` patch panels (``p < k``) with ``2^{k-p}``
+ports of every pod wired to every panel — so *reconfiguration never moves
+fibers between panels*, only jumpers inside each panel.
+
+Construction (the paper's proof, implemented):
+
+1. expand the integer multigraph into individual links;
+2. the multigraph has even degrees → find an Eulerian circuit per connected
+   component; orienting edges along the circuit gives in-degree = out-degree
+   = degree/2 at every node;
+3. the oriented graph's edges, viewed as a bipartite (out-port → in-port)
+   multigraph, are ``r``-regular → decompose into ``r`` perfect matchings
+   (repeated Hall augmenting paths); each matching pulled back to the
+   undirected graph is a **2-factor** (every node has degree exactly 2);
+4. group the 2-factors into ``2^p`` panel groups of equal size.
+
+We generalize slightly: degrees need only be *even* (not a power of two); a
+pod with degree ``2r_v < 2r_max`` simply contributes fewer links and the
+decomposition yields ``r_max`` "2-or-0-factors" (degree ≤ 2 everywhere), which
+still map onto fixed per-panel port budgets of ``ceil(2 r_v / panels)``.  For
+power-of-two radixes this reduces exactly to Theorem 4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import trunk_index
+
+__all__ = ["PanelAssignment", "eulerian_orientation", "two_factorize", "assign_panels"]
+
+
+@dataclasses.dataclass
+class PanelAssignment:
+    n_panels: int
+    # panel_edges[p] is an (L_p, 2) array of pod pairs (one row per physical link)
+    panel_edges: list
+
+    def links_per_pod_per_panel(self, n_pods: int) -> np.ndarray:
+        out = np.zeros((len(self.panel_edges), n_pods), dtype=np.int64)
+        for p, edges in enumerate(self.panel_edges):
+            for i, j in edges:
+                out[p, i] += 1
+                out[p, j] += 1
+        return out
+
+
+def _expand_links(n_pods: int, n_int: np.ndarray) -> list:
+    """Integer trunk counts -> explicit link list [(i, j), ...] (multigraph)."""
+    links = []
+    for e, (i, j) in enumerate(trunk_index(n_pods)):
+        links.extend([(int(i), int(j))] * int(n_int[e]))
+    return links
+
+
+def eulerian_orientation(n_pods: int, links: list) -> list:
+    """Orient an even-degree multigraph along Eulerian circuits.
+
+    Returns directed links [(u, v), ...] with in-degree == out-degree at every
+    node (per connected component).  Hierholzer's algorithm on an adjacency
+    multiset.
+    """
+    adj = [dict() for _ in range(n_pods)]  # neighbor -> count
+    deg = np.zeros(n_pods, dtype=np.int64)
+    for u, v in links:
+        adj[u][v] = adj[u].get(v, 0) + 1
+        adj[v][u] = adj[v].get(u, 0) + 1
+        deg[u] += 1
+        deg[v] += 1
+    if (deg % 2 != 0).any():
+        raise ValueError("all degrees must be even for Eulerian orientation")
+
+    directed = []
+    remaining = deg.copy()
+    for start in range(n_pods):
+        while remaining[start] > 0:
+            # Hierholzer: walk until back at start, splicing sub-circuits
+            stack = [start]
+            circuit = []
+            while stack:
+                u = stack[-1]
+                if adj[u]:
+                    v = next(iter(adj[u]))
+                    adj[u][v] -= 1
+                    if adj[u][v] == 0:
+                        del adj[u][v]
+                    adj[v][u] -= 1
+                    if adj[v][u] == 0:
+                        del adj[v][u]
+                    remaining[u] -= 1
+                    remaining[v] -= 1
+                    stack.append(v)
+                else:
+                    circuit.append(stack.pop())
+            directed.extend(zip(circuit[:-1], circuit[1:]))
+    return directed
+
+
+def _perfect_matching(n: int, adj: list) -> list | None:
+    """Hopcroft–Karp-lite: max bipartite matching via repeated augmenting DFS.
+    ``adj[u]`` = multiset dict of right-nodes.  Returns list pairing each left
+    u with a right node, or None if no perfect matching over active nodes."""
+    match_l = [-1] * n
+    match_r = [-1] * n
+
+    def try_kuhn(u, seen):
+        for v in adj[u]:
+            if adj[u][v] <= 0 or seen[v]:
+                continue
+            seen[v] = True
+            if match_r[v] == -1 or try_kuhn(match_r[v], seen):
+                match_l[u] = v
+                match_r[v] = u
+                return True
+        return False
+
+    for u in range(n):
+        if adj[u] and match_l[u] == -1:
+            if not try_kuhn(u, [False] * n):
+                return None
+    return match_l
+
+
+def two_factorize(n_pods: int, n_int: np.ndarray) -> list:
+    """Decompose an even-degree integer trunk multigraph into 2-factors.
+
+    Returns a list of factors; each factor is a list of undirected links
+    [(i, j), ...] in which every node appears in at most 2 links (exactly 2 for
+    nodes of maximal degree; exactly ``deg_v / r_max * ...`` — see module doc).
+    """
+    links = _expand_links(n_pods, n_int)
+    if not links:
+        return []
+    directed = eulerian_orientation(n_pods, links)
+    out_deg = np.zeros(n_pods, dtype=np.int64)
+    for u, _ in directed:
+        out_deg[u] += 1
+    r_max = int(out_deg.max())
+
+    # bipartite multigraph out -> in
+    adj = [dict() for _ in range(n_pods)]
+    for u, v in directed:
+        adj[u][v] = adj[u].get(v, 0) + 1
+
+    factors = []
+    for _ in range(r_max):
+        m = _perfect_matching(n_pods, adj)
+        if m is None:
+            # regularize: nodes with smaller degree may be skipped this round.
+            # Build matching over only the nodes with the max remaining degree
+            # by falling back to greedy peeling of one edge per active node.
+            m = [-1] * n_pods
+            used_r = set()
+            order = np.argsort(-np.array([sum(a.values()) for a in adj]))
+            for u in order:
+                u = int(u)
+                for v in sorted(adj[u], key=lambda vv: -adj[u][vv]):
+                    if v not in used_r and adj[u][v] > 0:
+                        m[u] = v
+                        used_r.add(v)
+                        break
+        factor = []
+        for u, v in enumerate(m):
+            if v is None or v < 0:
+                continue
+            adj[u][v] -= 1
+            if adj[u][v] == 0:
+                del adj[u][v]
+            factor.append((min(u, v), max(u, v)))
+        if factor:
+            factors.append(factor)
+    # anything left (irregular fallback) becomes extra factors greedily
+    leftovers = [(u, v) for u in range(n_pods) for v, c in adj[u].items() for _ in range(c)]
+    while leftovers:
+        used = set()
+        factor = []
+        rest = []
+        for u, v in leftovers:
+            if u in used or v in used:
+                rest.append((u, v))
+                continue
+            used.add(u)
+            used.add(v)
+            factor.append((min(u, v), max(u, v)))
+        factors.append(factor)
+        leftovers = rest
+    return factors
+
+
+def assign_panels(n_pods: int, n_int: np.ndarray, n_panels: int) -> PanelAssignment:
+    """Group 2-factors into ``n_panels`` balanced panel groups (Theorem 4)."""
+    factors = two_factorize(n_pods, n_int)
+    groups = [[] for _ in range(n_panels)]
+    for idx, factor in enumerate(factors):
+        groups[idx % n_panels].extend(factor)
+    return PanelAssignment(
+        n_panels=n_panels,
+        panel_edges=[np.asarray(g, dtype=np.int64).reshape(-1, 2) for g in groups],
+    )

@@ -1,0 +1,57 @@
+"""Predictor (paper §4.6): choose the best reconfiguration strategy for the
+next predicted interval by *simulating* all four strategies on the training
+window and applying the operator objective:
+
+    prefer the strategy whose p99.9 MLU is within ``cushion`` (5%) of the
+    best p99.9 MLU; break ties by p99.9 ALU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.controller import ControllerConfig, ControllerResult, run_controller
+from repro.core.graph import Fabric
+from repro.core.solver import STRATEGIES, SolverConfig, Strategy
+from repro.core.traffic import Trace
+
+__all__ = ["Prediction", "predict", "pick_best"]
+
+
+@dataclasses.dataclass
+class Prediction:
+    fabric: str
+    strategy: Strategy
+    per_strategy: dict  # name -> summary dict
+    cushion: float
+
+
+def pick_best(per_strategy: dict, cushion: float = 0.05) -> str:
+    """Operator objective (paper §4.6): among strategies with p99.9 MLU within
+    ``cushion`` of the minimum, pick the lowest p99.9 ALU."""
+    mlus = {k: v["p999_mlu"] for k, v in per_strategy.items()}
+    best = min(mlus.values())
+    eligible = {k for k, v in mlus.items() if v <= best * (1 + cushion) + 1e-12}
+    return min(eligible, key=lambda k: (per_strategy[k]["p999_alu"], k))
+
+
+def predict(
+    fabric: Fabric,
+    training: Trace,
+    cc: ControllerConfig | None = None,
+    sc: SolverConfig | None = None,
+    cushion: float = 0.05,
+    strategies: tuple = STRATEGIES,
+) -> Prediction:
+    """Simulate each strategy over the training window and pick the winner."""
+    per: dict = {}
+    by_name: dict = {}
+    for strat in strategies:
+        res: ControllerResult = run_controller(fabric, training, strat, cc, sc)
+        per[strat.name] = res.summary
+        by_name[strat.name] = strat
+    choice = pick_best(per, cushion)
+    return Prediction(fabric=fabric.name, strategy=by_name[choice],
+                      per_strategy=per, cushion=cushion)

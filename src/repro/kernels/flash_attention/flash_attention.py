@@ -1,0 +1,107 @@
+"""Pallas TPU flash attention: blocked online-softmax with causal + sliding
+window masks and GQA head mapping.
+
+Layout: q is reshaped to (B·H, S, hd) and k/v to (B·KV, T, hd) by ops.py.
+Grid is ``(B·H, nq, nk)`` — nk innermost, so each (row, q-block) accumulates
+its running max/sum/output in VMEM scratch across k-blocks and writes out on
+the last one.  The k/v BlockSpec index map folds the GQA group mapping
+``kv_row = b·KV + h // (H/KV)``.  Mask semantics match
+``repro.models.attention.causal_mask`` exactly (window 0 ⇒ global).
+
+MXU alignment: block shapes default to (128, 128) tiles with hd padded to a
+multiple of 128 upstream; softmax statistics are kept in f32 regardless of
+input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            bq: int, bk: int, causal: bool, window: int, seq_q: int, seq_k: int,
+            scale: float):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # (bq, hd)
+    k = k_ref[0]  # (bk, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    qi = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kj = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kj < seq_k
+    if causal:
+        mask &= kj <= qi
+    if window > 0:
+        mask &= kj > qi - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)  # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[...] + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_heads", "n_kv", "causal", "window", "seq_q", "seq_k", "bq", "bk",
+    "interpret", "sm_scale"))
+def flash_attention_pallas(q, k, v, *, n_heads: int, n_kv: int, causal: bool,
+                           window: int, seq_q: int, seq_k: int,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = False, sm_scale: float = 0.0):
+    """q (B·H, Sq, hd); k/v (B·KV, Sk, hd), pre-padded to block multiples.
+    ``seq_q``/``seq_k`` are the true lengths (padding masked inside)."""
+    bh, sq, hd = q.shape
+    _, sk, _ = k.shape
+    assert sq % bq == 0 and sk % bk == 0
+    groups = n_heads // n_kv
+    grid = (bh, sq // bq, sk // bk)
+
+    def kv_index(r, iq, ik):
+        return (r // n_heads * n_kv + (r % n_heads) // groups, ik, 0)
+
+    kern = functools.partial(
+        _kernel, bq=bq, bk=bk, causal=causal, window=window,
+        seq_q=seq_q, seq_k=seq_k,
+        scale=sm_scale if sm_scale else 1.0 / (hd ** 0.5))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda r, iq, ik: (r, iq, 0)),
+            pl.BlockSpec((1, bk, hd), kv_index),
+            pl.BlockSpec((1, bk, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda r, iq, ik: (r, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

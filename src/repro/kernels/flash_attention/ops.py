@@ -1,0 +1,50 @@
+"""Public wrapper: (B, S, H, hd) GQA attention via the Pallas flash kernel.
+
+Handles head flattening, sequence padding to block multiples, hd padding to
+the 128-lane MXU width, and backend dispatch (TPU: compiled kernel; CPU:
+interpret mode; "ref": jnp oracle).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _pad_axis(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, pad)
+    return jnp.pad(x, width)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    backend: str = "pallas", bq: int = 128, bk: int = 128):
+    """q (B, Sq, H, hd); k/v (B, Sk, KV, hd) -> (B, Sq, H, hd)."""
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, sk, hd)
+    if backend == "ref":
+        out = attention_ref(qf, kf, vf, n_heads=h, n_kv=kv, causal=causal,
+                            window=window, seq_q=sq, seq_k=sk)
+    else:
+        hd_pad = max(128, int(np.ceil(hd / 128) * 128))
+        qp = _pad_axis(_pad_axis(qf, 1, bq), 2, hd_pad)
+        kp = _pad_axis(_pad_axis(kf, 1, bk), 2, hd_pad)
+        vp = _pad_axis(_pad_axis(vf, 1, bk), 2, hd_pad)
+        # padded hd columns are zero ⇒ contribute nothing to q·k or p·v
+        interpret = jax.default_backend() == "cpu"
+        out = flash_attention_pallas(
+            qp, kp, vp, n_heads=h, n_kv=kv, causal=causal, window=window,
+            seq_q=sq, seq_k=sk, bq=bq, bk=bk, interpret=interpret,
+            sm_scale=1.0 / (hd ** 0.5))  # scale by TRUE head dim, not padded
+        out = out[:, :sq, :hd]
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

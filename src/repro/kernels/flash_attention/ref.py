@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention (same mask semantics)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(q, k, v, *, n_heads: int, n_kv: int, causal: bool,
+                  window: int, seq_q: int, seq_k: int):
+    """q (B·H, Sq, hd); k/v (B·KV, Sk, hd). Unfused softmax attention."""
+    bh, sq, hd = q.shape
+    groups = n_heads // n_kv
+    b = bh // n_heads
+    kv_row = (jnp.arange(bh) // n_heads) * n_kv + (jnp.arange(bh) % n_heads) // groups
+    k_full = k[kv_row]  # (B·H, Sk, hd)
+    v_full = v[kv_row]
+    s = jnp.einsum("rqd,rkd->rqk", q, k_full).astype(jnp.float32) / (hd ** 0.5)
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(k.shape[1])[None, :]
+    mask = kj < seq_k
+    if causal:
+        mask = mask & (kj <= qi)
+    if window > 0:
+        mask = mask & (kj > qi - window)
+    s = jnp.where(mask[None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("rqk,rkd->rqd", w, v_full)

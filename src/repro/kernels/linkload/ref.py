@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused link-load metrics kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linkload_metrics_ref(demand, w, inv_cap, threshold):
+    """Unfused reference: materializes the (T, E) load matrix.
+
+    Args:
+      demand: (T, C) f32; w: (C, E) f32; inv_cap: (1, E) f32 (0 ⇒ dead link);
+      threshold: scalar overload threshold.
+    Returns: (mlu, alu_sum, olr_count, load_sum), each (T,) f32.
+    """
+    load = demand @ w  # (T, E)
+    util = load * inv_cap  # dead/padded links contribute 0
+    mlu = util.max(axis=1)
+    alu_sum = util.sum(axis=1)
+    olr_count = (util > threshold).astype(jnp.float32).sum(axis=1)
+    load_sum = load.sum(axis=1)
+    return mlu, alu_sum, olr_count, load_sum

@@ -1,0 +1,34 @@
+"""Wrapper: padding + backend dispatch for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan_pallas
+
+
+def _pad(x, axis, mult, value):
+    p = (-x.shape[axis]) % mult
+    if p == 0:
+        return x
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, p)
+    return jnp.pad(x, width, constant_values=value)
+
+
+def rglru_scan(a, b, backend: str = "pallas", bb: int = 8, bd: int = 128,
+               chunk: int = 128):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t. a, b: (B, S, D) f32."""
+    if backend == "ref":
+        return rglru_scan_ref(a, b)
+    bsz, s, d = a.shape
+    bb = min(bb, bsz)
+    while bsz % bb:
+        bb -= 1
+    ap = _pad(_pad(a, 1, chunk, 1.0), 2, bd, 1.0)  # a=1: carry passthrough
+    bp = _pad(_pad(b, 1, chunk, 0.0), 2, bd, 0.0)  # b=0: no injection
+    interpret = jax.default_backend() == "cpu"
+    h = rglru_scan_pallas(ap, bp, bb=bb, bd=bd, chunk=chunk, interpret=interpret)
+    return h[:, :s, :d]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: associative-scan linear recurrence (same as models.rglru)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t * h_{t-1} + b_t along axis 1. a, b: (B, S, D)."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

@@ -1,0 +1,21 @@
+"""Wrapper: padding + backend dispatch for the SSD chunk kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
+from repro.kernels.ssd_chunk.ssd_chunk import ssd_chunk_pallas
+
+
+def ssd_scan(x, dt, a, b, c, chunk: int = 128, backend: str = "pallas"):
+    """SSD over (B, H, S, P) heads-major layout; see ssd_chunk.py for shapes."""
+    if backend == "ref":
+        return ssd_chunk_ref(x, dt, a, b, c, chunk)
+    s = x.shape[2]
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    interpret = jax.default_backend() == "cpu"
+    return ssd_chunk_pallas(x, dt, a, b, c, chunk=chunk, interpret=interpret)

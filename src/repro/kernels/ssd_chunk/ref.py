@@ -1,0 +1,19 @@
+"""Oracle for the SSD chunk kernel: repro.models.ssd.ssd_chunked re-layout."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssd import ssd_chunked
+
+
+def ssd_chunk_ref(x, dt, a, b, c, chunk: int = 128):
+    """Same layout as the kernel: x (B,H,S,P), dt (B,H,S,1), a (H,1,1,1),
+    b/c (B,1,S,N) -> y (B,H,S,P)."""
+    xs = x.transpose(0, 2, 1, 3)                 # (B,S,H,P)
+    dts = dt[:, :, :, 0].transpose(0, 2, 1)      # (B,S,H)
+    av = a[:, 0, 0, 0]                           # (H,)
+    bs = b[:, 0]                                 # (B,S,N)
+    cs = c[:, 0]
+    y = ssd_chunked(xs, dts, av, bs, cs, chunk)  # (B,S,H,P)
+    return y.transpose(0, 2, 1, 3)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan (one (batch, head) per grid row).
+
+Implements the full state-space-duality recurrence for one head: grid
+``(B, H, nc)`` with chunk index innermost; the (N, P) state is carried in
+VMEM scratch across chunks.  Per chunk (length Q):
+
+  y_intra = ((C Bᵀ) ⊙ decay_mask) · (dt ⊙ x)     — the masked quadratic dual
+  y_inter = (C · S_in) ⊙ exp(L)                  — contribution of the carry
+  S_out   = S_in · exp(L_Q) + Bᵀ · (dt ⊙ x ⊙ exp(L_Q − L))
+
+All statistics (decays, state) are f32; the two matmuls per chunk hit the MXU
+with (Q, N)·(N, Q) and (Q, Q)·(Q, P) shapes — Q = 128, N = 128, P = 64 are
+hardware-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0]  # (Q, P)
+    dt = dt_ref[0, 0]  # (Q, 1)
+    a = a_ref[0, 0]  # (1, 1) scalar decay rate for this head
+    bmat = b_ref[0, 0]  # (Q, N)
+    cmat = c_ref[0, 0]  # (Q, N)
+
+    log_decay = dt * a[0, 0]  # (Q, 1), ≤ 0
+    lcum = jnp.cumsum(log_decay, axis=0)  # (Q, 1)
+
+    q = x.shape[0]
+    seg = lcum - lcum.T  # (Q, Q): L_s − L_t
+    mask = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    seg = jnp.where(mask, seg, -1e30)
+    decay = jnp.exp(seg)
+
+    cb = jnp.dot(cmat, bmat.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    att = cb * decay
+    xdt = x * dt  # (Q, P)
+    y_intra = jnp.dot(att, xdt, preferred_element_type=jnp.float32)
+
+    s_in = state_ref[...]  # (N, P)
+    y_inter = jnp.dot(cmat, s_in, preferred_element_type=jnp.float32) * jnp.exp(lcum)
+
+    tail = jnp.exp(lcum[-1:] - lcum)  # (Q, 1): exp(L_Q − L_t)
+    state_ref[...] = s_in * jnp.exp(lcum[-1, 0]) + jnp.dot(
+        (bmat * tail).T, xdt, preferred_element_type=jnp.float32)
+
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_pallas(x, dt, a, b, c, chunk: int = 128, interpret: bool = False):
+    """x (B, H, S, P) f32; dt (B, H, S, 1); a (H, 1, 1, 1); b/c (B, 1, S, N).
+    Returns y (B, H, S, P)."""
+    bsz, h, s, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0
+    grid = (bsz, h, s // chunk)
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda ib, ih, ic: (ih, 0, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda ib, ih, ic: (ib, 0, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda ib, ih, ic: (ib, 0, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p), lambda ib, ih, ic: (ib, ih, ic, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, s, p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)

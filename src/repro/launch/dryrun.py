@@ -1,0 +1,248 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede every other import (jax locks the device
+# count at first init).  512 placeholder host devices back the production
+# meshes; nothing is ever allocated — lowering uses ShapeDtypeStructs only.
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh).
+
+For each cell this:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod);
+  2. lowers the REAL step (train_step with AdamW + microbatched grad
+     accumulation, or serve_step with the decode cache) with fully sharded
+     in/out shardings;
+  3. compiles, records memory_analysis() + cost_analysis();
+  4. parses the optimized HLO for collectives → roofline collective term and
+     the pod-level traffic matrix handed to Gemini's controller.
+
+Results are cached per cell in benchmarks/results/dryrun/<cell>.json so
+re-runs (and the roofline bench) are incremental.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+# per-arch microbatch counts for train_4k (memory fit at 256 chips)
+MICROBATCHES = {"dbrx-132b": 8, "qwen3-14b": 8, "gemma3-12b": 8, "llama3-8b": 8,
+                "deepseek-7b": 8, "mixtral-8x7b": 8, "recurrentgemma-9b": 8,
+                "seamless-m4t-large-v2": 4, "internvl2-1b": 4, "mamba2-130m": 4}
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool, tag: str = "") -> pathlib.Path:
+    mesh = "pod2" if multi_pod else "pod1"
+    suffix = f"__{tag}" if tag else ""
+    return RESULTS / f"{arch}__{shape}__{mesh}{suffix}.json"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False,
+             profile: str = "fsdp", microbatches: int | None = None,
+             remat: str = "full", window_cache: bool = False,
+             cache_dtype: str = "", moe_impl: str = "", moe_groups: int = 0,
+             ssd_chunk: int = 0, tag: str = "") -> dict:
+    """One dry-run cell.  The keyword knobs are the §Perf hillclimb levers:
+    sharding profile, microbatch count, remat policy, windowed ring KV cache,
+    and narrow cache dtype; ``tag`` names the variant's result file."""
+    out_path = cell_path(arch, shape_name, multi_pod, tag)
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    import jax
+    import numpy as np
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import (StepConfig, cache_shardings, input_shardings,
+                                    make_serve_step, make_train_step,
+                                    train_state_shardings)
+    from repro.models.api import build_model, supports_cell
+    from repro.models.config import ALL_SHAPES
+    from repro.optim.adamw import AdamW
+    from repro.parallel.sharding import param_shardings, use_mesh
+    from repro.runtime.hlo_traffic import (collective_summary, parse_collectives,
+                                           pod_traffic_matrix)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    shape = {s.name: s for s in ALL_SHAPES}[shape_name]
+    cfg = get_arch(arch)
+    ok, why = supports_cell(cfg, shape)
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
+    }
+    if not ok:
+        record.update(status="skipped", reason=why)
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(record, indent=2))
+        return record
+
+    import dataclasses
+    if moe_impl:
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
+        if moe_groups:
+            cfg = dataclasses.replace(cfg, moe_groups=moe_groups)
+    if ssd_chunk:
+        cfg = dataclasses.replace(cfg, ssd_chunk=ssd_chunk)
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.parallel.sharding import set_profile
+    set_profile(profile)
+    record.update(profile=profile, remat=remat, window_cache=window_cache,
+                  cache_dtype=cache_dtype or "bf16")
+    cdt = None
+    if cache_dtype and cache_dtype != "bf16":
+        import jax.numpy as jnp
+        cdt = {"f8": jnp.float8_e4m3fn, "int8": jnp.int8,
+               "f32": jnp.float32}[cache_dtype]
+    t0 = time.time()
+    try:
+        with use_mesh(mesh):
+            pshapes = model.param_shapes()
+            pshard = param_shardings(mesh, pshapes)
+            specs = model.input_specs(shape, cache_dtype=cdt,
+                                      window_cache=window_cache)
+            if shape.kind == "train":
+                opt = AdamW()
+                mb = microbatches or MICROBATCHES.get(arch, 8)
+                step_cfg = StepConfig(
+                    microbatches=mb,
+                    remat="dots" if remat == "dots" else True)
+                record.update(microbatches=mb)
+                step = make_train_step(model, opt, step_cfg)
+                oshapes = jax.eval_shape(lambda p: opt.init(p), pshapes)
+                _, oshard = train_state_shardings(mesh, model, opt)
+                in_sh = input_shardings(mesh, cfg, shape, specs)
+                metr_sh = {k: NamedSharding(mesh, P())
+                           for k in ("loss", "grad_norm", "lr")}
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(pshard, oshard, in_sh),
+                    out_shardings=(pshard, oshard, metr_sh),
+                ).lower(pshapes, oshapes, specs)
+            elif shape.kind == "prefill":
+                from repro.launch.steps import make_prefill_step
+                step = make_prefill_step(model)
+                in_sh = input_shardings(mesh, cfg, shape, specs)
+                dp = tuple(a for a in mesh.axis_names if a != "model")
+                out_sh = NamedSharding(
+                    mesh, P(dp if shape.global_batch % np.prod(
+                        [mesh.shape[a] for a in dp]) == 0 else None, None))
+                lowered = jax.jit(
+                    step, in_shardings=(pshard, in_sh), out_shardings=out_sh,
+                ).lower(pshapes, specs)
+            else:  # decode
+                ring = bool(window_cache and cfg.window and not cfg.local_global_ratio)
+                step = make_serve_step(model, ring=ring)
+                in_sh = input_shardings(mesh, cfg, shape, specs)
+                cache_sh = in_sh["cache"]
+                tok_sh = in_sh["token"]
+                pos_spec = jax.ShapeDtypeStruct((), jax.numpy.int32)
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(pshard, cache_sh, tok_sh, NamedSharding(mesh, P())),
+                    out_shardings=(tok_sh, cache_sh),
+                ).lower(pshapes, specs["cache"], specs["token"], pos_spec)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, list) else (ca or {})
+        hlo = compiled.as_text()
+        # trip-count-aware analysis (cost_analysis counts while bodies ONCE —
+        # useless for scan-over-layers models; see runtime/hlo_cost.py)
+        from repro.runtime.hlo_cost import analyze
+        cost = analyze(hlo)
+        ops = cost.collective_ops
+        summary = collective_summary(ops)
+        n_pods = 2 if multi_pod else 1
+        tm = pod_traffic_matrix(ops, devices_per_pod=256, n_pods=n_pods)
+        record.update(
+            status="ok",
+            lower_seconds=round(t_lower, 1),
+            compile_seconds=round(t_compile, 1),
+            flops=float(cost.flops),  # per-device, loop-expanded
+            hbm_bytes=float(cost.hbm_bytes),
+            unknown_trip_loops=cost.unknown_trip_loops,
+            xla_flops_once=float(ca.get("flops", 0.0)),
+            bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+            memory_analysis={
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "code_bytes": int(mem.generated_code_size_in_bytes),
+            },
+            collectives=summary,
+            pod_tm_bytes=tm.tolist(),
+            n_collective_ops=len(ops),
+            model_params=cfg.param_count(),
+            model_params_active=cfg.active_param_count(),
+        )
+        print(f"[dryrun] OK  {arch} × {shape_name} × {record['mesh']} "
+              f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s, "
+              f"flops {record['flops']:.3g}, "
+              f"wire/chip {summary['total_wire_bytes_per_chip']:.3g} B)")
+    except Exception as exc:  # record failures — they are bugs to fix
+        record.update(status="failed", error=f"{type(exc).__name__}: {exc}",
+                      traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] FAIL {arch} × {shape_name} × {record['mesh']}: {exc}")
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(record, indent=2))
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--profile", default="fsdp", choices=["fsdp", "fsdp_pod", "tp"])
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--remat", default="full", choices=["full", "dots"])
+    ap.add_argument("--window-cache", action="store_true")
+    ap.add_argument("--cache-dtype", default="", choices=["", "bf16", "f8", "f32"])
+    ap.add_argument("--moe-impl", default="", choices=["", "onehot", "sorted"])
+    ap.add_argument("--ssd-chunk", type=int, default=0)
+    ap.add_argument("--moe-groups", type=int, default=0)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS
+    from repro.models.config import ALL_SHAPES
+
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = [s.name for s in ALL_SHAPES] if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    failures = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, multi_pod, force=args.force,
+                               profile=args.profile,
+                               microbatches=args.microbatches or None,
+                               remat=args.remat, window_cache=args.window_cache,
+                               cache_dtype=args.cache_dtype,
+                               moe_impl=args.moe_impl,
+                               moe_groups=args.moe_groups,
+                               ssd_chunk=args.ssd_chunk, tag=args.tag)
+                failures += rec["status"] == "failed"
+    print(f"[dryrun] done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

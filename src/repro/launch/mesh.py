@@ -1,0 +1,27 @@
+"""Production meshes.  Defined as FUNCTIONS so importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax import).
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis is the Gemini-managed DCNI dimension.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Tiny mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    model_axis = min(model_axis, n)
+    return jax.make_mesh(
+        (n // model_axis, model_axis), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

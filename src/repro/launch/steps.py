@@ -1,0 +1,189 @@
+"""Sharded train / serve step builders + sharding assignment for every input.
+
+``make_train_step`` builds the full production step — microbatched gradient
+accumulation (lax.scan), remat'd model, AdamW update, optional gradient
+compression hook — as a single jittable function.  ``make_serve_step`` builds
+the one-token decode step with its KV/state cache threaded through.
+
+``input_shardings`` / ``cache_shardings`` assign NamedShardings for every
+batch leaf and cache leaf per (arch × shape × mesh):
+  * batch dims shard over the dp axes when divisible, else stay replicated
+    (long_500k has batch 1);
+  * decode-cache sequence dims shard over "model" (and over the dp axes too
+    when batch cannot absorb them) — the context-parallel KV layout;
+  * SSM/recurrent state shards heads/channels over "model".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.api import Model
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.optim.adamw import AdamW
+from repro.parallel.sharding import dp_axes, fit_spec, param_shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    microbatches: int = 1
+    remat: bool = True
+    compression: str = "none"  # "none" | "topk" | "int8" (DP-axis grads)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: Model, opt: AdamW, step_cfg: StepConfig):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    k = step_cfg.microbatches
+
+    def train_step(params, opt_state, batch):
+        if k > 1:
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+
+            def mb_step(acc, mbatch):
+                def loss_of(p):
+                    loss, _ = model.loss(p, mbatch, remat=step_cfg.remat)
+                    return loss
+
+                loss, grads = jax.value_and_grad(loss_of)(params)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32) / k, acc, grads)
+                return acc, loss
+
+            zeros = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(mb_step, zeros, mb)
+            loss = losses.mean()
+        else:
+            def loss_of(p):
+                loss, _ = model.loss(p, batch, remat=step_cfg.remat)
+                return loss
+
+            loss, grads = jax.value_and_grad(loss_of)(params)
+
+        if step_cfg.compression != "none":
+            from repro.optim.compression import compress_decompress
+            grads = compress_decompress(grads, step_cfg.compression)
+
+        params, opt_state, om = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+def make_serve_step(model: Model, ring: bool = False):
+    """(params, cache, token, pos) -> (next_token, cache)."""
+
+    def serve_step(params, cache, token, pos):
+        logits, cache = model.decode(params, cache, token, pos, ring=ring)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return serve_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        logits = model.forward(params, batch)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# sharding assignment
+# ---------------------------------------------------------------------------
+
+def _dp_for(mesh: Mesh, n: int):
+    """dp axes if they divide n (or n divides them evenly enough): else None."""
+    axes = dp_axes(mesh)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if n % size == 0:
+        return axes
+    return None
+
+
+def input_shardings(mesh: Mesh, cfg: ArchConfig, shape: ShapeConfig, specs) -> dict:
+    """NamedSharding tree matching model.input_specs output."""
+    dp = _dp_for(mesh, shape.global_batch)
+
+    def assign(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        nd = len(leaf.shape)
+        if name == "cache":
+            raise AssertionError  # handled by cache_shardings
+        if name in ("tokens", "labels", "mask", "token"):
+            spec = P(dp, *([None] * (nd - 1)))
+        elif name in ("patches", "frames"):
+            spec = P(dp, "model", None)
+        else:
+            spec = P(*([None] * nd))
+        return NamedSharding(mesh, fit_spec(mesh, leaf.shape, spec))
+
+    out = {}
+    for key, leaf in specs.items():
+        if key == "cache":
+            out[key] = cache_shardings(mesh, cfg, shape, leaf)
+        else:
+            out[key] = assign((jax.tree_util.DictKey(key),), leaf)
+    return out
+
+
+def cache_shardings(mesh: Mesh, cfg: ArchConfig, shape: ShapeConfig, cache_shapes):
+    """Decode-cache shardings: (L, B, S, KV, hd) KV caches, SSM/rec states."""
+    dp = _dp_for(mesh, shape.global_batch)
+
+    def assign(path, leaf):
+        name = str(getattr(path[-1], "key", getattr(path[-1], "idx", "")))
+        nd = len(leaf.shape)
+        if name in ("k", "v"):  # (L, B, S, KV, hd)
+            if dp is not None:
+                spec = P(None, dp, "model", None, None)
+            else:
+                # batch too small (long_500k): context-parallel over everything
+                spec = P(None, None, tuple(dp_axes(mesh)) + ("model",), None, None)
+        elif name == "s":  # SSM state (L, B, H, N, P)
+            spec = P(None, dp, "model", None, None)
+            if leaf.shape[2] % mesh.shape["model"]:
+                spec = P(None, dp, None, "model", None)  # shard N instead of H
+        elif name == "conv":  # (L, B, K-1, convdim)
+            spec = P(None, dp, None, "model")
+        elif name == "h":  # rec state (L, B, dr)
+            spec = P(None, dp, "model")
+        elif name == "enc_out":  # (B, T, d)
+            if dp is not None:
+                spec = P(dp, "model", None)
+            else:
+                spec = P(None, tuple(dp_axes(mesh)) + ("model",), None)
+        else:
+            spec = P(*([None] * nd))
+        return NamedSharding(mesh, fit_spec(mesh, leaf.shape, spec))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shapes)
+
+
+def train_state_shardings(mesh: Mesh, model: Model, opt: AdamW):
+    """(param shardings, opt-state shardings) from the FSDP/TP rules."""
+    pshapes = model.param_shapes()
+    pshard = param_shardings(mesh, pshapes)
+    oshapes = jax.eval_shape(lambda p: opt.init(p), pshapes)
+    from repro.optim.adamw import AdamWState
+    oshard = AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=pshard, nu=pshard)
+    return pshard, oshard

@@ -1,0 +1,81 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --steps 50 \
+        [--reduced] [--batch 8] [--seq 128] [--microbatches 1] \
+        [--compression none|topk|int8] [--ckpt-dir /tmp/ckpt]
+
+``--reduced`` (default on CPU) trains the smoke-scale variant; the full
+configs are exercised through the dry-run (``repro.launch.dryrun``).
+The run report includes the Gemini traffic extraction: the step's pod-level
+TM and the DCNI plan the controller would deploy for it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compression", default="none")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=100)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config (needs real accelerators)")
+    ap.add_argument("--report", default="")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_arch
+    from repro.data.pipeline import DataConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import StepConfig
+    from repro.models.api import build_model
+    from repro.optim.adamw import AdamW
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = get_arch(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    opt = AdamW(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                total_steps=args.steps)
+    tcfg = TrainerConfig(total_steps=args.steps,
+                         checkpoint_every=args.checkpoint_every,
+                         n_pods=1, devices_per_pod=len(jax.devices()))
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                          global_batch=args.batch)
+    trainer = Trainer(model, opt, mesh, data_cfg,
+                      StepConfig(microbatches=args.microbatches,
+                                 compression=args.compression),
+                      tcfg, args.ckpt_dir)
+    trainer.install_signal_handlers()
+    out = trainer.run()
+    losses = out["losses"]
+    report = {
+        "arch": cfg.name, "steps": out["last_step"],
+        "loss_first": float(np.mean(losses[:5])) if losses else None,
+        "loss_last": float(np.mean(losses[-5:])) if losses else None,
+        "mean_step_seconds": float(np.mean(out["stats"]["step_times"])),
+        "straggler_events": out["stats"]["straggler_events"],
+        "preempted": out["preempted"],
+    }
+    print(json.dumps(report, indent=2))
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Uniform model facade used by the launcher, dry-run, and tests.
+
+``Model`` wraps one architecture family behind five operations:
+
+  init(rng)                      -> params
+  loss(params, batch)            -> (scalar, metrics)        [train shapes]
+  prefill-style full forward     -> logits                   [prefill shapes]
+  decode(params, cache, tok, pos)-> (logits, cache)          [decode shapes]
+  input_specs(shape)             -> ShapeDtypeStruct pytrees  [dry-run]
+
+`input_specs` returns (args, kwargs)-free flat dicts: everything the jitted
+step functions take, as shape/dtype stand-ins — weak-type-correct, shardable,
+and never allocated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.models.layers import dtype_of
+
+LONG_CONTEXT_OK = ("ssm", "hybrid")  # families that run long_500k natively
+
+
+def supports_cell(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether (arch × shape) is a valid cell, and why not if not."""
+    if shape.name == "long_500k":
+        if cfg.family in LONG_CONTEXT_OK:
+            return True, ""
+        if cfg.window and not cfg.local_global_ratio:
+            return True, ""  # pure sliding-window attention (mixtral)
+        if cfg.local_global_ratio:
+            return True, ""  # gemma3: locals windowed, rare globals full-KV
+        return False, ("pure full-attention arch: 500k decode requires "
+                       "sub-quadratic attention (skip noted in DESIGN.md)")
+    return True, ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---- init ------------------------------------------------------------
+    def init(self, rng):
+        if self.cfg.family == "audio":
+            return encdec.init_params(rng, self.cfg)
+        return transformer.init_params(rng, self.cfg)
+
+    # ---- training loss ------------------------------------------------------
+    def loss(self, params, batch, remat: bool = True):
+        if self.cfg.family == "audio":
+            return encdec.loss_fn(params, batch, self.cfg, remat)
+        return transformer.loss_fn(params, batch, self.cfg, remat)
+
+    # ---- full forward (prefill) ----------------------------------------------
+    def forward(self, params, batch, remat: bool = True):
+        if self.cfg.family == "audio":
+            return encdec.forward(params, batch["frames"], batch["tokens"],
+                                  self.cfg, remat)
+        logits, _ = transformer.forward(params, batch["tokens"], self.cfg,
+                                        patches=batch.get("patches"), remat=remat)
+        return logits
+
+    # ---- decode ------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, enc_len: int = 0,
+                   dtype=None, window_cache: bool = False):
+        if self.cfg.family == "audio":
+            return encdec.init_cache(self.cfg, batch, max_seq, enc_len or max_seq,
+                                     dtype=dtype)
+        return transformer.init_cache(self.cfg, batch, max_seq, dtype=dtype,
+                                      window_cache=window_cache)
+
+    def decode(self, params, cache, token, pos, ring: bool = False):
+        if self.cfg.family == "audio":
+            return encdec.decode_step(params, cache, token, pos, self.cfg)
+        return transformer.decode_step(params, cache, token, pos, self.cfg,
+                                       ring=ring)
+
+    # ---- dry-run specs --------------------------------------------------------
+    def param_shapes(self, rng=None):
+        return jax.eval_shape(lambda k: self.init(k), jax.random.key(0))
+
+    def input_specs(self, shape: ShapeConfig, cache_dtype=None,
+                    window_cache: bool = False) -> dict:
+        """ShapeDtypeStruct stand-ins for the step the shape cell lowers."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        dt = dtype_of(cfg)
+        tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+        if shape.kind == "train":
+            if cfg.family == "audio":
+                return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                        "tokens": tok(b, s), "labels": tok(b, s)}
+            batch = {"tokens": tok(b, s), "labels": tok(b, s)}
+            if cfg.family == "vlm":
+                npatch = cfg.frontend_tokens
+                batch = {"tokens": tok(b, s - npatch), "labels": tok(b, s - npatch),
+                         "patches": jax.ShapeDtypeStruct((b, npatch, cfg.d_model), dt)}
+            return batch
+        if shape.kind == "prefill":
+            if cfg.family == "audio":
+                return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                        "tokens": tok(b, s)}
+            batch = {"tokens": tok(b, s)}
+            if cfg.family == "vlm":
+                npatch = cfg.frontend_tokens
+                batch = {"tokens": tok(b, s - npatch),
+                         "patches": jax.ShapeDtypeStruct((b, npatch, cfg.d_model), dt)}
+            return batch
+        # decode: one token against a seq_len cache
+        cache = jax.eval_shape(lambda: self.init_cache(
+            b, s, enc_len=s, dtype=cache_dtype, window_cache=window_cache))
+        return {"token": tok(b, 1), "cache": cache}
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,152 @@
+"""Grouped-query attention with RoPE, optional qk-norm and sliding windows.
+
+Covers every assigned attention variant:
+  * GQA with arbitrary kv-head counts (qwen3 8, deepseek 32=MHA, rg 1=MQA);
+  * qk_norm (qwen3);
+  * sliding-window / local attention (gemma3 locals, mixtral SWA,
+    recurrentgemma local blocks) and local:global interleaving;
+  * decode with a KV cache (one new token against seq_len of cache) — the
+    cache layout (B, S, n_kv, hd) shards batch over "data" and sequence over
+    "model" for the long-context decode cells;
+  * cross-attention (seamless enc-dec).
+
+The full-sequence path can route through the Pallas flash-attention kernel
+(TPU target); the default jnp path is what the multi-pod dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of, init_dense, rms_norm, rope
+
+NEG_INF = -2.0e38
+
+
+def init_attn_params(key, cfg, d_model=None):
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    p = {
+        "wq": init_dense(ks[0], (d, cfg.n_heads * hd), dtype=dt),
+        "wk": init_dense(ks[1], (d, cfg.n_kv_heads * hd), dtype=dt),
+        "wv": init_dense(ks[2], (d, cfg.n_kv_heads * hd), dtype=dt),
+        "wo": init_dense(ks[3], (cfg.n_heads * hd, d), dtype=dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions=None):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """q (B,S,H,hd), k/v (B,T,KV,hd); GQA via head grouping."""
+    hd = q.shape[-1]
+    groups = cfg.n_heads // cfg.n_kv_heads
+    b, s, h, _ = q.shape
+    t = k.shape[1]
+    qg = q.reshape(b, s, cfg.n_kv_heads, groups, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, hd)
+
+
+def causal_mask(s: int, window=0):
+    """Causal (+ optional sliding window) mask; ``window`` may be a traced
+    int32 scalar (0 ⇒ global attention) so local/global layer patterns can be
+    selected inside a layer scan."""
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    window = jnp.asarray(window, jnp.int32)
+    return (j <= i) & ((window == 0) | (j > i - window))
+
+
+def self_attention(p, x, cfg, window: int = 0, positions=None):
+    """Full-sequence causal self-attention (train / prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    mask = jnp.broadcast_to(causal_mask(s, window)[None], (b, s, s))
+    out = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bshd,hde->bse", out,
+                      p["wo"].reshape(cfg.n_heads, cfg.resolved_head_dim, -1))
+
+
+def decode_attention(p, x, cache, pos, cfg, window: int = 0, ring: bool = False):
+    """One-token decode. x (B, 1, d); cache {"k","v"}: (B, S, KV, hd).
+
+    Returns (out (B, 1, d), new_cache).  ``pos`` is the scalar position of the
+    new token (all sequences decode in lockstep — the serving batch model).
+
+    ``ring=True``: the cache is a sliding-window ring buffer of size W =
+    cache seq-dim (pure-SWA archs, e.g. mixtral): the new token writes slot
+    ``pos % W``; keys are cached post-RoPE so absolute positions survive the
+    wraparound, and masking only excludes not-yet-written slots.
+    The cache may be stored in a narrower dtype (e.g. f8) — compute upcasts.
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    s = cache["k"].shape[1]
+    slot = (pos % s) if ring else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    j = jnp.arange(s)[None, None, :]
+    if ring:
+        mask = j <= pos  # wraparound: every slot valid once pos ≥ S
+    else:
+        window = jnp.asarray(window, jnp.int32)
+        mask = (j <= pos) & ((window == 0) | (j > pos - window))
+    mask = jnp.broadcast_to(mask, (b, 1, s))
+    out = _sdpa(q, k.astype(x.dtype), v.astype(x.dtype), mask, cfg)
+    out = jnp.einsum("bshd,hde->bse", out,
+                     p["wo"].reshape(cfg.n_heads, cfg.resolved_head_dim, -1))
+    return out, {"k": k, "v": v}
+
+
+def init_cross_attn_params(key, cfg, d_enc=None):
+    d = cfg.d_model
+    de = d_enc or d
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    return {
+        "wq": init_dense(ks[0], (d, cfg.n_heads * hd), dtype=dt),
+        "wk": init_dense(ks[1], (de, cfg.n_kv_heads * hd), dtype=dt),
+        "wv": init_dense(ks[2], (de, cfg.n_kv_heads * hd), dtype=dt),
+        "wo": init_dense(ks[3], (cfg.n_heads * hd, d), dtype=dt),
+    }
+
+
+def cross_attention(p, x, enc, cfg):
+    """x (B, S, d) attends over encoder output enc (B, T, d_enc)."""
+    b, s, _ = x.shape
+    t = enc.shape[1]
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = jnp.einsum("btd,dh->bth", enc, p["wk"]).reshape(b, t, cfg.n_kv_heads, hd)
+    v = jnp.einsum("btd,dh->bth", enc, p["wv"]).reshape(b, t, cfg.n_kv_heads, hd)
+    mask = jnp.ones((b, s, t), bool)
+    out = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bshd,hde->bse", out, p["wo"].reshape(cfg.n_heads, hd, -1))

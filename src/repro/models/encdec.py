@@ -1,0 +1,155 @@
+"""Encoder–decoder transformer (seamless-m4t backbone; audio frontend STUB).
+
+Per the brief, the modality frontend is a stub: the encoder consumes
+*precomputed frame embeddings* (B, S_enc, d) from ``input_specs``.  The
+encoder is a bidirectional transformer; the decoder adds cross-attention to
+the encoder output.  Decode caches both the decoder self-attention KV and the
+(static) projected encoder context.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.config import ArchConfig
+from repro.models.layers import (dtype_of, embed, init_dense, rms_norm,
+                                 softmax_cross_entropy, swiglu)
+from repro.parallel.sharding import constrain
+
+
+def _mlp_init(key, cfg):
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    return {"w_gate": init_dense(ks[0], (cfg.d_model, cfg.d_ff), dtype=dt),
+            "w_up": init_dense(ks[1], (cfg.d_model, cfg.d_ff), dtype=dt),
+            "w_down": init_dense(ks[2], (cfg.d_ff, cfg.d_model), dtype=dt)}
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 6)
+    dt = dtype_of(cfg)
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {"norm1": jnp.zeros((cfg.d_model,), dt),
+                "attn": attn.init_attn_params(k1, cfg),
+                "norm2": jnp.zeros((cfg.d_model,), dt),
+                "mlp": _mlp_init(k2, cfg)}
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"norm1": jnp.zeros((cfg.d_model,), dt),
+                "attn": attn.init_attn_params(k1, cfg),
+                "norm_x": jnp.zeros((cfg.d_model,), dt),
+                "xattn": attn.init_cross_attn_params(k2, cfg),
+                "norm2": jnp.zeros((cfg.d_model,), dt),
+                "mlp": _mlp_init(k3, cfg)}
+
+    return {
+        "embed": init_dense(ks[0], (cfg.vocab, cfg.d_model), scale=0.02, dtype=dt),
+        "enc_blocks": _stack([enc_block(jax.random.fold_in(ks[1], i))
+                              for i in range(cfg.encoder_layers)]),
+        "enc_norm": jnp.zeros((cfg.d_model,), dt),
+        "dec_blocks": _stack([dec_block(jax.random.fold_in(ks[2], i))
+                              for i in range(cfg.n_layers)]),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "unembed": init_dense(ks[3], (cfg.d_model, cfg.vocab), dtype=dt),
+    }
+
+
+def encode(params, frames, cfg: ArchConfig, remat: bool = True):
+    """frames (B, S_enc, d) -> encoder output (B, S_enc, d)."""
+    x = constrain(frames, "dp", "sp", None)
+    from repro.models.transformer import _ck
+    ck = _ck(remat)
+
+    @ck
+    def body(xc, blk):
+        h = rms_norm(xc, blk["norm1"])
+        b, s, _ = h.shape
+        q, k, v = attn._project_qkv(blk["attn"], h, cfg,
+                                    jnp.broadcast_to(jnp.arange(s)[None], (b, s)))
+        mask = jnp.ones((b, s, s), bool)  # bidirectional
+        out = attn._sdpa(q, k, v, mask, cfg)
+        out = jnp.einsum("bshd,hde->bse", out,
+                         blk["attn"]["wo"].reshape(cfg.n_heads, cfg.resolved_head_dim, -1))
+        xc = xc + out
+        h = rms_norm(xc, blk["norm2"])
+        xc = xc + swiglu(h, blk["mlp"]["w_gate"], blk["mlp"]["w_up"], blk["mlp"]["w_down"])
+        return constrain(xc, "dp", "sp", None), None
+
+    x, _ = jax.lax.scan(lambda c, s: body(c, s), x, params["enc_blocks"])
+    return rms_norm(x, params["enc_norm"])
+
+
+def _dec_block(blk, x, enc_out, cfg, window=0):
+    h = rms_norm(x, blk["norm1"])
+    x = x + attn.self_attention(blk["attn"], h, cfg, window=window)
+    h = rms_norm(x, blk["norm_x"])
+    x = x + attn.cross_attention(blk["xattn"], h, enc_out, cfg)
+    h = rms_norm(x, blk["norm2"])
+    x = x + swiglu(h, blk["mlp"]["w_gate"], blk["mlp"]["w_up"], blk["mlp"]["w_down"])
+    return constrain(x, "dp", "sp", None)
+
+
+def forward(params, frames, tokens, cfg: ArchConfig, remat: bool = True):
+    """Full enc-dec pass: frames (B, S_enc, d), tokens (B, S_dec)."""
+    enc_out = encode(params, frames, cfg, remat)
+    x = embed(tokens, params["embed"])
+    x = constrain(x, "dp", "sp", None)
+    from repro.models.transformer import _ck
+    ck = _ck(remat)
+
+    @ck
+    def body(xc, blk):
+        return _dec_block(blk, xc, enc_out, cfg), None
+
+    x, _ = jax.lax.scan(lambda c, s: body(c, s), x, params["dec_blocks"])
+    x = rms_norm(x, params["final_norm"])
+    return jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+
+
+def loss_fn(params, batch, cfg: ArchConfig, remat: bool = True):
+    logits = forward(params, batch["frames"], batch["tokens"], cfg, remat)
+    loss = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"ce": loss}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, enc_len: int, dtype=None):
+    dt = dtype or dtype_of(cfg)
+    hd = cfg.resolved_head_dim
+    kv = lambda s: {"k": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dt),
+                    "v": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dt)}
+    return {
+        "self": _stack([kv(max_seq) for _ in range(cfg.n_layers)]),
+        "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), dt),
+    }
+
+
+def decode_step(params, cache, token, pos, cfg: ArchConfig):
+    """One decoder token against cached self-KV and encoder output."""
+    x = embed(token, params["embed"])
+    x = constrain(x, "dp", None, None)
+    enc_out = cache["enc_out"]
+
+    def body(xc, scanned):
+        blk, kv_cache = scanned
+        h = rms_norm(xc, blk["norm1"])
+        out, kv_new = attn.decode_attention(blk["attn"], h, kv_cache, pos, cfg)
+        xc = xc + out
+        h = rms_norm(xc, blk["norm_x"])
+        xc = xc + attn.cross_attention(blk["xattn"], h, enc_out, cfg)
+        h = rms_norm(xc, blk["norm2"])
+        xc = xc + swiglu(h, blk["mlp"]["w_gate"], blk["mlp"]["w_up"], blk["mlp"]["w_down"])
+        return xc, kv_new
+
+    x, new_self = jax.lax.scan(body, x, (params["dec_blocks"], cache["self"]))
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    return logits, {"self": new_self, "enc_out": enc_out}

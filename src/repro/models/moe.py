@@ -1,0 +1,155 @@
+"""GShard-style mixture-of-experts FFN (dbrx 16e top-4, mixtral 8e top-2).
+
+Capacity-based dispatch with one-hot combine tensors so expert parallelism is
+pure einsum: sharding the expert axis over the ``model`` mesh axis turns the
+dispatch/combine contractions into the canonical MoE all-to-alls under XLA
+SPMD — which is exactly the skewed, bursty inter-pod traffic Gemini's ToE is
+designed for (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of, init_dense
+
+
+def init_moe_params(key, cfg):
+    ks = jax.random.split(key, 4)
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = dtype_of(cfg)
+    return {
+        "router": init_dense(ks[0], (d, e), dtype=jnp.float32),
+        "w_gate": init_dense(ks[1], (e, d, ff), dtype=dt),
+        "w_up": init_dense(ks[2], (e, d, ff), dtype=dt),
+        "w_down": init_dense(ks[3], (e, ff, d), dtype=dt),
+    }
+
+
+def moe_ffn(p, x, cfg):
+    """Dispatch selector: GShard one-hot einsum (baseline) or sort-based."""
+    if getattr(cfg, "moe_impl", "onehot") == "sorted":
+        return moe_ffn_sorted(p, x, cfg)
+    return moe_ffn_onehot(p, x, cfg)
+
+
+def moe_ffn_onehot(p, x, cfg):
+    """x: (B, S, d) -> (B, S, d), plus aux load-balancing loss.
+
+    GShard-style one-hot dispatch/combine tensors (T, E, C).  NOTE: building
+    them costs O(T²·k/E·d)-ish matmul work — quadratic in tokens — which the
+    roofline flags as the dominant compute term at 32k-token batches; the
+    ``sorted`` implementation below is the linear-cost replacement (§Perf).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n_tok = b * s
+    capacity = max(1, int(cfg.capacity_factor * n_tok * k / e))
+    if n_tok <= 256:
+        # decode / tiny batches: lossless capacity (an expert may receive every
+        # token; dropping at serve time would corrupt single-token outputs)
+        capacity = n_tok
+    xt = x.reshape(n_tok, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)  # (T, k, E)
+    flat = onehot.reshape(n_tok * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(n_tok, k, e)
+    pos = (pos_in_expert * onehot).sum(-1)  # (T, k)
+    keep = pos < capacity  # overflow tokens dropped (standard GShard behavior)
+
+    # dispatch (T, E, C) and combine (weighted dispatch)
+    disp = (jax.nn.one_hot(expert_idx, e, dtype=xt.dtype)[..., None]
+            * jax.nn.one_hot(pos, capacity, dtype=xt.dtype)[:, :, None, :]
+            * keep[..., None, None].astype(xt.dtype))  # (T, k, E, C)
+    combine = (disp * gate_vals[..., None, None].astype(xt.dtype)).sum(1)  # (T, E, C)
+    disp = disp.sum(1)  # (T, E, C)
+
+    expert_in = jnp.einsum("tec,td->ecd", disp, xt)  # (E, C, d)
+    g = jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w_down"])
+    out = jnp.einsum("tec,ecd->td", combine, expert_out)
+
+    # aux loss (Switch-style): mean prob * mean assignment per expert
+    me = probs.mean(0)
+    ce = jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32).mean(0)
+    aux = (me * ce).sum() * e
+    return out.reshape(b, s, d), aux
+
+
+def moe_ffn_sorted(p, x, cfg):
+    """Linear-cost MoE dispatch: sort token-assignments by expert, place into
+    per-group (G, E, C, d) capacity buffers by scatter, gather back after the
+    expert FFNs.
+
+    Replaces the (T, E, C) one-hot tensors (and their O(T²)-ish dispatch
+    matmuls) with one argsort + O(T·k) gathers/scatters.  Tokens are first
+    split into ``cfg.moe_groups`` groups aligned with the data-parallel
+    sharding, so under SPMD every sort/scatter is *shard-local* — the only
+    cross-device traffic left is the canonical expert all-to-all inside the
+    (g, e) einsums.  Beyond-paper optimization; see EXPERIMENTS.md §Perf.
+    Numerics match the one-hot path up to bf16 rounding and per-group (vs
+    global) capacity when tokens overflow.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n_tok = b * s
+    groups = max(1, getattr(cfg, "moe_groups", 1))
+    while n_tok % groups:
+        groups //= 2
+    tl = n_tok // groups  # tokens per group
+    capacity = max(1, int(cfg.capacity_factor * tl * k / e))
+    if tl <= 256:
+        capacity = tl  # lossless decode capacity (see onehot path)
+    xg = x.reshape(groups, tl, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (G, Tl, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = expert_idx.reshape(groups, tl * k)
+    flat_t = jnp.broadcast_to(
+        (jnp.arange(tl * k, dtype=jnp.int32) // k)[None], (groups, tl * k))
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    sorted_t = jnp.take_along_axis(flat_t, order, axis=-1)
+    gidx = jnp.broadcast_to(jnp.arange(groups, dtype=jnp.int32)[:, None],
+                            (groups, tl * k))
+    counts = jnp.zeros((groups, e), jnp.int32).at[gidx, sorted_e].add(1)
+    starts = jnp.cumsum(counts, axis=-1) - counts
+    pos_in_e = (jnp.arange(tl * k, dtype=jnp.int32)[None]
+                - jnp.take_along_axis(starts, sorted_e, axis=-1))
+    keep = pos_in_e < capacity
+    # slot in the per-group flattened (E·C [+1 overflow row]) buffer
+    slot = jnp.where(keep, sorted_e * capacity + pos_in_e, e * capacity)
+
+    xt_sorted = jnp.take_along_axis(xg, sorted_t[..., None], axis=1)
+    buf = jnp.zeros((groups, e * capacity + 1, d), x.dtype).at[
+        gidx, slot].add(xt_sorted)
+    expert_in = buf[:, : e * capacity].reshape(groups, e, capacity, d)
+    g = jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * u, p["w_down"])
+
+    out_flat = jnp.concatenate(
+        [expert_out.reshape(groups, e * capacity, d),
+         jnp.zeros((groups, 1, d), expert_out.dtype)], axis=1)
+    y_sorted = jnp.take_along_axis(out_flat, slot[..., None], axis=1)
+    gates_sorted = (jnp.take_along_axis(gate_vals.reshape(groups, tl * k),
+                                        order, axis=-1)
+                    * keep.astype(jnp.float32))
+    y = jnp.zeros((groups, tl, d), jnp.float32).at[gidx, sorted_t].add(
+        y_sorted.astype(jnp.float32) * gates_sorted[..., None])
+
+    me = probs.reshape(-1, e).mean(0)
+    ce = jax.nn.one_hot(expert_idx[..., 0].reshape(-1), e, dtype=jnp.float32).mean(0)
+    aux = (me * ce).sum() * e
+    return y.astype(x.dtype).reshape(b, s, d), aux

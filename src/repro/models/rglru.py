@@ -1,0 +1,107 @@
+"""RecurrentGemma / Griffin recurrent block: conv1d + RG-LRU (arXiv:2402.19427).
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(x_t W_a + b_a)          (recurrence gate)
+    i_t = sigmoid(x_t W_x + b_x)          (input gate)
+    a_t = exp(-c * softplus(Λ) * r_t)     (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The sequence mixing is a first-order linear recurrence — evaluated with
+``jax.lax.associative_scan`` (train/prefill; the Pallas ``rglru_scan`` kernel
+is the TPU-target chunked version) or one step at a time (decode).
+The block: x → [linear → gelu] ⊙ [linear → conv1d → RG-LRU] → linear out.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of, init_dense
+
+_C = 8.0
+
+
+def init_rglru_params(key, cfg):
+    d = cfg.d_model
+    dr = d  # recurrent width = d_model
+    ks = jax.random.split(key, 7)
+    dt = dtype_of(cfg)
+    lam = jax.random.uniform(ks[5], (dr,), jnp.float32, 0.9, 0.999)
+    # Λ init s.t. a ≈ lam at r = 0.5: softplus(Λ) = -2 ln(lam) / c
+    lam_raw = jnp.log(jnp.expm1(-2.0 * jnp.log(lam) / _C))
+    return {
+        "w_in_gate": init_dense(ks[0], (d, dr), dtype=dt),
+        "w_in_rec": init_dense(ks[1], (d, dr), dtype=dt),
+        "conv_w": init_dense(ks[2], (cfg.conv_width, dr), dtype=dt),
+        "w_a": init_dense(ks[3], (dr, dr), dtype=dt),
+        "w_x": init_dense(ks[4], (dr, dr), dtype=dt),
+        "lambda_raw": lam_raw,
+        "w_out": init_dense(ks[6], (dr, d), dtype=dt),
+    }
+
+
+def _gates(p, x):
+    """x (..., dr) -> (a, gated_input) in f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xf, p["w_a"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xf, p["w_x"].astype(jnp.float32)))
+    log_a = -_C * jax.nn.softplus(p["lambda_raw"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, gated
+
+
+def rglru_scan(p, x):
+    """Full-sequence RG-LRU via associative scan. x: (B, S, dr)."""
+    a, b = _gates(p, x)  # (B, S, dr) f32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype)
+
+
+def rglru_step(p, x_t, h_prev):
+    """One decode step. x_t (B, dr), h_prev (B, dr) f32 state."""
+    a, b = _gates(p, x_t)
+    h = a * h_prev + b
+    return h.astype(x_t.dtype), h
+
+
+def _causal_conv(w, x, state=None):
+    """Depthwise causal conv1d. x (B, S, dr), w (K, dr). With ``state``
+    ((B, K-1, dr)) performs one-step decode and returns the updated state."""
+    k = w.shape[0]
+    if state is not None:  # decode: x is (B, 1, dr)
+        window = jnp.concatenate([state, x], axis=1)  # (B, K, dr)
+        out = jnp.einsum("bkd,kd->bd", window.astype(jnp.float32),
+                         w.astype(jnp.float32))[:, None, :]
+        return out.astype(x.dtype), window[:, 1:, :]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    windows = jnp.stack([pad[:, i : i + x.shape[1]] for i in range(k)], axis=2)
+    out = jnp.einsum("bskd,kd->bsd", windows.astype(jnp.float32), w.astype(jnp.float32))
+    return out.astype(x.dtype), None
+
+
+def recurrent_block(p, x):
+    """Full Griffin recurrent block, full sequence. x: (B, S, d)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_in_gate"]))
+    rec = jnp.einsum("bsd,de->bse", x, p["w_in_rec"])
+    rec, _ = _causal_conv(p["conv_w"], rec)
+    rec = rglru_scan(p, rec)
+    return jnp.einsum("bse,ed->bsd", gate * rec, p["w_out"])
+
+
+def recurrent_block_step(p, x_t, state):
+    """One-token decode. x_t (B, 1, d); state {"h": (B, dr) f32,
+    "conv": (B, K-1, dr)}."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x_t, p["w_in_gate"]))
+    rec = jnp.einsum("bsd,de->bse", x_t, p["w_in_rec"])
+    rec, conv_state = _causal_conv(p["conv_w"], rec, state["conv"])
+    h_out, h_new = rglru_step(p, rec[:, 0, :], state["h"])
+    out = jnp.einsum("bse,ed->bsd", gate * h_out[:, None, :], p["w_out"])
+    return out, {"h": h_new, "conv": conv_state}

@@ -1,0 +1,161 @@
+"""Mamba2 SSD (state-space duality, arXiv:2405.21060) block.
+
+Selective SSM with scalar-per-head decay, computed with the chunked SSD
+algorithm: within a chunk the token mixing is a masked quadratic form (the
+"attention dual"); across chunks a compact state ``S (B, H, P, N)`` is carried
+through ``jax.lax.scan``.  The Pallas ``ssd_chunk`` kernel is the TPU-target
+intra-chunk tile; this module's jnp path is the dry-run/oracle version.
+
+Shapes: d_inner = 2·d_model, heads H = d_inner / 64 (head dim P = 64),
+one B/C group (G = 1), state size N = cfg.ssm_state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of, init_dense
+
+HEAD_P = 64
+
+
+def dims(cfg):
+    d_inner = 2 * cfg.d_model
+    n_heads = d_inner // HEAD_P
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def init_ssd_params(key, cfg):
+    d = cfg.d_model
+    d_inner, h, n = dims(cfg)
+    ks = jax.random.split(key, 5)
+    dt = dtype_of(cfg)
+    conv_dim = d_inner + 2 * n  # conv over x, B, C
+    return {
+        "w_in": init_dense(ks[0], (d, 2 * d_inner + 2 * n + h), dtype=dt),
+        "conv_w": init_dense(ks[1], (cfg.conv_width, conv_dim), dtype=dt),
+        "a_log": jnp.log(jax.random.uniform(ks[2], (h,), jnp.float32, 1.0, 16.0)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "w_out": init_dense(ks[3], (d_inner, d), dtype=dt),
+        "norm_z": jnp.zeros((d_inner,), dt),
+    }
+
+
+def _split_proj(p, x, cfg):
+    d_inner, h, n = dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xc, b, c, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1)
+    return z, xc, b, c, dt_raw
+
+
+def _conv(w, u, state=None):
+    k = w.shape[0]
+    if state is not None:
+        window = jnp.concatenate([state, u], axis=1)
+        out = jnp.einsum("bkd,kd->bd", window.astype(jnp.float32),
+                         w.astype(jnp.float32))[:, None, :]
+        return jax.nn.silu(out).astype(u.dtype), window[:, 1:, :]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    windows = jnp.stack([pad[:, i : i + u.shape[1]] for i in range(k)], axis=2)
+    out = jnp.einsum("bskd,kd->bsd", windows.astype(jnp.float32), w.astype(jnp.float32))
+    return jax.nn.silu(out).astype(u.dtype), None
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int):
+    """Chunked SSD. x (B,S,H,P) f32, dt (B,S,H) f32, a (H,) f32 (negative),
+    b/c (B,S,N) f32 (G=1).  Returns y (B,S,H,P) f32.
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, "sequence must be divisible by chunk"
+    nc = s // chunk
+    xr = x.reshape(bsz, nc, chunk, h, p)
+    dtr = dt.reshape(bsz, nc, chunk, h)
+    br = b.reshape(bsz, nc, chunk, n)
+    cr = c.reshape(bsz, nc, chunk, n)
+
+    log_decay = dtr * a[None, None, None, :]  # (B, nc, Q, H), ≤ 0
+    lcum = jnp.cumsum(log_decay, axis=2)  # L_s
+
+    # intra-chunk quadratic term: y[s] += Σ_{t≤s} C_s·B_t exp(L_s − L_t) dt_t x_t
+    seg = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]  # (B,nc,Q,Q,H) L_s − L_t
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # clamp the masked (t > s) entries BEFORE exp: exp of a large positive
+    # masked-out value is inf, and where(mask, inf, 0) has NaN gradients.
+    seg = jnp.where(mask[None, None, :, :, None], seg, -1e30)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum("bcsn,bctn->bcst", cr, br)  # (B,nc,Q,Q)
+    att = cb[..., None] * decay  # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcsth,bcth,bcthp->bcshp", att, dtr, xr)
+
+    # chunk-end states and inter-chunk scan
+    tail_decay = jnp.exp(lcum[:, :, -1:, :] - lcum)  # exp(L_Q − L_t)
+    state_in = jnp.einsum("bcth,bcth,bctn,bcthp->bchnp", tail_decay, dtr, br, xr)
+    chunk_decay = jnp.exp(lcum[:, :, -1, :])  # (B, nc, H)
+
+    def scan_fn(s_prev, inp):
+        s_in, dec = inp  # (B,H,N,P), (B,H)
+        s_new = s_prev * dec[:, :, None, None] + s_in
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, n, p), x.dtype)
+    _, s_starts = jax.lax.scan(
+        scan_fn, s0,
+        (state_in.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    s_starts = s_starts.transpose(1, 0, 2, 3, 4)  # (B, nc, H, N, P)
+
+    y_inter = jnp.einsum("bcsn,bcsh,bchnp->bcshp", cr, jnp.exp(lcum), s_starts)
+    return (y_intra + y_inter).reshape(bsz, s, h, p)
+
+
+def ssd_block(p, x, cfg, chunk: int = 64):
+    """Full-sequence Mamba2 block. x (B, S, d) -> (B, S, d)."""
+    d_inner, h, n = dims(cfg)
+    chunk = min(chunk, x.shape[1])
+    while x.shape[1] % chunk:
+        chunk //= 2
+    z, xc, b, c, dt_raw = _split_proj(p, x, cfg)
+    conv_in = jnp.concatenate([xc, b, c], axis=-1)
+    conv_out, _ = _conv(p["conv_w"], conv_in)
+    xc, b, c = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    bsz, s, _ = x.shape
+    xh = xc.astype(jnp.float32).reshape(bsz, s, h, HEAD_P)
+    y = ssd_chunked(xh, dt, a, b.astype(jnp.float32), c.astype(jnp.float32), chunk)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    # gated RMSNorm (mamba2 norm before out-proj)
+    zf = jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y.astype(jnp.float32) * zf), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * zf) * jax.lax.rsqrt(var + 1e-6)
+    y = (y * (1.0 + p["norm_z"].astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"])
+
+
+def ssd_block_step(p, x_t, state, cfg):
+    """One-token decode. state: {"s": (B,H,N,P) f32, "conv": (B,K-1,convdim)}."""
+    d_inner, h, n = dims(cfg)
+    z, xc, b, c, dt_raw = _split_proj(p, x_t, cfg)
+    conv_in = jnp.concatenate([xc, b, c], axis=-1)
+    conv_out, conv_state = _conv(p["conv_w"], conv_in, state["conv"])
+    xc, b, c = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B, H)
+    a = -jnp.exp(p["a_log"])
+    bsz = x_t.shape[0]
+    xh = xc.astype(jnp.float32).reshape(bsz, h, HEAD_P)
+    decay = jnp.exp(dt * a[None, :])  # (B, H)
+    s_new = (state["s"] * decay[:, :, None, None]
+             + jnp.einsum("bh,bn,bhp->bhnp", dt, b[:, 0].astype(jnp.float32), xh))
+    y = jnp.einsum("bn,bhnp->bhp", c[:, 0].astype(jnp.float32), s_new)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, d_inner)
+    zf = jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y * zf), axis=-1, keepdims=True)
+    y = (y * zf) * jax.lax.rsqrt(var + 1e-6)
+    y = (y * (1.0 + p["norm_z"].astype(jnp.float32))).astype(x_t.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, {"s": s_new, "conv": conv_state}

@@ -1,0 +1,367 @@
+"""Unified decoder-only model covering dense / MoE / VLM / hybrid / SSM.
+
+Layers are *stacked* (leading axis L) and applied with ``jax.lax.scan`` over
+``jax.checkpoint``-wrapped blocks: HLO size is O(1) in depth (fast 512-device
+compiles) and activation memory is O(1) per layer (remat).  The residual
+stream carries a sequence-sharded constraint ("sp") between blocks — the
+Megatron sequence-parallel layout — so saved carries scale with 1/|model|.
+
+Families:
+  dense  — pre-norm GQA attention + SwiGLU (qwen3/llama3/deepseek/gemma3);
+           gemma3's 5:1 local:global pattern selects the window per layer
+           index inside the scan.
+  moe    — attention + GShard MoE FFN (dbrx/mixtral; mixtral adds SWA).
+  vlm    — dense backbone consuming precomputed patch embeddings (stub
+           frontend per the brief) concatenated before text tokens.
+  hybrid — Griffin super-blocks (rec, rec, attn-local) scanned together,
+           plus trailing recurrent blocks when L % 3 != 0 (recurrentgemma).
+  ssm    — Mamba2 SSD blocks (attention-free).
+
+Decode ("serve_step") carries per-layer caches/states stacked along the same
+leading axis, scanned in lockstep with the parameters.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg
+from repro.models import ssd as ssd_mod
+from repro.models.config import ArchConfig
+from repro.models.layers import (dtype_of, embed, init_dense, rms_norm,
+                                 softmax_cross_entropy, unembed)
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    block = {"norm1": jnp.zeros((cfg.d_model,), dt),
+             "norm2": jnp.zeros((cfg.d_model,), dt)}
+    block["attn"] = attn.init_attn_params(ks[0], cfg)
+    if cfg.family == "moe":
+        block["moe"] = moe_mod.init_moe_params(ks[1], cfg)
+    else:
+        block["mlp"] = {
+            "w_gate": init_dense(ks[1], (cfg.d_model, cfg.d_ff), dtype=dt),
+            "w_up": init_dense(ks[2], (cfg.d_model, cfg.d_ff), dtype=dt),
+            "w_down": init_dense(ks[3], (cfg.d_ff, cfg.d_model), dtype=dt),
+        }
+    return block
+
+
+def _init_hybrid_super(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 6)
+    dt = dtype_of(cfg)
+    mlp = lambda k: {
+        "w_gate": init_dense(jax.random.fold_in(k, 0), (cfg.d_model, cfg.d_ff), dtype=dt),
+        "w_up": init_dense(jax.random.fold_in(k, 1), (cfg.d_model, cfg.d_ff), dtype=dt),
+        "w_down": init_dense(jax.random.fold_in(k, 2), (cfg.d_ff, cfg.d_model), dtype=dt),
+    }
+    def rec_block(k):
+        return {"norm1": jnp.zeros((cfg.d_model,), dt),
+                "rec": rg.init_rglru_params(k, cfg),
+                "norm2": jnp.zeros((cfg.d_model,), dt),
+                "mlp": mlp(jax.random.fold_in(k, 7))}
+    return {
+        "rec1": rec_block(ks[0]),
+        "rec2": rec_block(ks[1]),
+        "attn_blk": {"norm1": jnp.zeros((cfg.d_model,), dt),
+                     "attn": attn.init_attn_params(ks[2], cfg),
+                     "norm2": jnp.zeros((cfg.d_model,), dt),
+                     "mlp": mlp(ks[3])},
+    }
+
+
+def _init_ssm_block(key, cfg: ArchConfig):
+    return {"norm1": jnp.zeros((cfg.d_model,), dtype_of(cfg)),
+            "ssd": ssd_mod.init_ssd_params(key, cfg)}
+
+
+def init_params(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 8)
+    dt = dtype_of(cfg)
+    params = {
+        "embed": init_dense(ks[0], (cfg.vocab, cfg.d_model), scale=0.02, dtype=dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_dense(ks[1], (cfg.d_model, cfg.vocab), dtype=dt)
+
+    if cfg.family == "hybrid":
+        n_super, n_tail = divmod(cfg.n_layers, 3)
+        params["super"] = _stack(
+            [_init_hybrid_super(jax.random.fold_in(ks[2], i), cfg) for i in range(n_super)])
+        if n_tail:
+            params["tail"] = _stack(
+                [_init_hybrid_super(jax.random.fold_in(ks[3], i), cfg)["rec1"]
+                 for i in range(n_tail)])
+    elif cfg.family == "ssm":
+        params["blocks"] = _stack(
+            [_init_ssm_block(jax.random.fold_in(ks[2], i), cfg) for i in range(cfg.n_layers)])
+    else:
+        params["blocks"] = _stack(
+            [_init_block(jax.random.fold_in(ks[2], i), cfg) for i in range(cfg.n_layers)])
+    return params
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# layer-window pattern (gemma3 local:global, mixtral SWA, hybrid local attn)
+# ---------------------------------------------------------------------------
+
+def layer_window(cfg: ArchConfig, layer_idx):
+    """Traced per-layer window: 0 = global. gemma3: every (ratio+1)-th layer
+    is global; others local with cfg.window."""
+    if cfg.local_global_ratio and cfg.window:
+        period = cfg.local_global_ratio + 1
+        is_global = (layer_idx % period) == (period - 1)
+        return jnp.where(is_global, 0, cfg.window)
+    return jnp.int32(cfg.window)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _dense_block_fwd(block, x, cfg, window):
+    h = rms_norm(x, block["norm1"])
+    h = attn.self_attention(block["attn"], h, cfg, window=window)
+    x = x + h
+    h = rms_norm(x, block["norm2"])
+    if cfg.family == "moe":
+        h, aux = moe_mod.moe_ffn(block["moe"], h, cfg)
+    else:
+        from repro.models.layers import swiglu
+        h = swiglu(h, block["mlp"]["w_gate"], block["mlp"]["w_up"], block["mlp"]["w_down"])
+        aux = jnp.float32(0.0)
+    x = x + h
+    x = constrain(x, "dp", "sp", None)
+    return x, aux
+
+
+def _rec_block_fwd(block, x, cfg):
+    from repro.models.layers import swiglu
+    h = rms_norm(x, block["norm1"])
+    x = x + rg.recurrent_block(block["rec"], h)
+    h = rms_norm(x, block["norm2"])
+    x = x + swiglu(h, block["mlp"]["w_gate"], block["mlp"]["w_up"], block["mlp"]["w_down"])
+    return constrain(x, "dp", "sp", None)
+
+
+def _hybrid_super_fwd(sup, x, cfg):
+    from repro.models.layers import swiglu
+    x = _rec_block_fwd(sup["rec1"], x, cfg)
+    x = _rec_block_fwd(sup["rec2"], x, cfg)
+    blk = sup["attn_blk"]
+    h = rms_norm(x, blk["norm1"])
+    x = x + attn.self_attention(blk["attn"], h, cfg, window=cfg.window)
+    h = rms_norm(x, blk["norm2"])
+    x = x + swiglu(h, blk["mlp"]["w_gate"], blk["mlp"]["w_up"], blk["mlp"]["w_down"])
+    return constrain(x, "dp", "sp", None)
+
+
+def _ssm_block_fwd(block, x, cfg):
+    h = rms_norm(x, block["norm1"])
+    x = x + ssd_mod.ssd_block(block["ssd"], h, cfg, chunk=cfg.ssd_chunk)
+    return constrain(x, "dp", "sp", None)
+
+
+def _ck(remat):
+    """remat: False | True (full recompute) | "dots" (save matmul outputs)."""
+    if remat == "dots":
+        return functools.partial(
+            jax.checkpoint,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if remat:
+        return jax.checkpoint
+    return lambda f: f
+
+
+def backbone(params, x, cfg: ArchConfig, remat=True):
+    """Apply all blocks to embedded input x (B, S, d). Returns (x, aux_loss)."""
+    ck = _ck(remat)
+
+    if cfg.family == "hybrid":
+        @ck
+        def body_fn(xc, sup):
+            return _hybrid_super_fwd(sup, xc, cfg), None
+
+        x, _ = jax.lax.scan(lambda c, s: body_fn(c, s), x, params["super"])
+        if "tail" in params:
+            @ck
+            def tail_fn(xc, blk):
+                return _rec_block_fwd(blk, xc, cfg), None
+
+            x, _ = jax.lax.scan(lambda c, s: tail_fn(c, s), x, params["tail"])
+        return x, jnp.float32(0.0)
+
+    if cfg.family == "ssm":
+        @ck
+        def body_fn(xc, blk):
+            return _ssm_block_fwd(blk, xc, cfg), None
+
+        x, _ = jax.lax.scan(lambda c, s: body_fn(c, s), x, params["blocks"])
+        return x, jnp.float32(0.0)
+
+    layer_ids = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+
+    @ck
+    def body_fn(xc, scanned):
+        blk, lid = scanned
+        window = layer_window(cfg, lid)
+        return _dense_block_fwd(blk, xc, cfg, window)
+
+    x, aux = jax.lax.scan(lambda c, s: body_fn(c, s), x, (params["blocks"], layer_ids))
+    return x, aux.sum()
+
+
+def _project_logits(params, x, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return unembed(x, params["embed"])  # (V, d) table
+    return jnp.einsum("...d,dv->...v", x, params["unembed"])
+
+
+def forward(params, tokens, cfg: ArchConfig, patches=None, remat: bool = True):
+    """Logits for a full sequence. ``patches`` (B, Np, d) for the VLM stub."""
+    x = embed(tokens, params["embed"])
+    if patches is not None:
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    x = constrain(x, "dp", "sp", None)
+    x, aux = backbone(params, x, cfg, remat)
+    x = rms_norm(x, params["final_norm"])
+    logits = _project_logits(params, x, cfg)
+    if patches is not None:
+        logits = logits[:, patches.shape[1]:]
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ArchConfig, remat: bool = True):
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          patches=batch.get("patches"), remat=remat)
+    loss = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None,
+               window_cache: bool = False):
+    """Stacked per-layer decode state.  ``window_cache`` allocates a ring
+    buffer of the sliding-window size for pure-SWA archs (mixtral) instead of
+    the full sequence — the long-context serving optimization (§Perf)."""
+    dt = dtype or dtype_of(cfg)
+    hd = cfg.resolved_head_dim
+    kv_seq = max_seq
+    if window_cache and cfg.window and not cfg.local_global_ratio:
+        kv_seq = min(max_seq, cfg.window)
+    kv = lambda: {"k": jnp.zeros((batch, kv_seq, cfg.n_kv_heads, hd), dt),
+                  "v": jnp.zeros((batch, kv_seq, cfg.n_kv_heads, hd), dt)}
+    if cfg.family == "ssm":
+        d_inner, h, n = ssd_mod.dims(cfg)
+        conv_dim = d_inner + 2 * n
+        one = lambda: {"s": jnp.zeros((batch, h, n, HEADP_of(cfg)), jnp.float32),
+                       "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dt)}
+        return {"blocks": _stack([one() for _ in range(cfg.n_layers)])}
+    if cfg.family == "hybrid":
+        n_super, n_tail = divmod(cfg.n_layers, 3)
+        rec_state = lambda: {"h": jnp.zeros((batch, cfg.d_model), jnp.float32),
+                             "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_model), dt)}
+        sup = lambda: {"rec1": rec_state(), "rec2": rec_state(), "attn": kv()}
+        cache = {"super": _stack([sup() for _ in range(n_super)])}
+        if n_tail:
+            cache["tail"] = _stack([rec_state() for _ in range(n_tail)])
+        return cache
+    return {"blocks": _stack([kv() for _ in range(cfg.n_layers)])}
+
+
+def HEADP_of(cfg):
+    return ssd_mod.HEAD_P
+
+
+def decode_step(params, cache, token, pos, cfg: ArchConfig, ring: bool = False):
+    """One new token for every sequence. token (B, 1) int32; pos scalar.
+    Returns (logits (B, 1, V), new_cache).  ``ring``: windowed ring cache."""
+    x = embed(token, params["embed"])
+    x = constrain(x, "dp", None, None)
+
+    if cfg.family == "ssm":
+        def body(xc, scanned):
+            blk, st = scanned
+            h = rms_norm(xc, blk["norm1"])
+            out, st_new = ssd_mod.ssd_block_step(blk["ssd"], h, st, cfg)
+            return xc + out, st_new
+
+        x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+        new_cache = {"blocks": new_blocks}
+    elif cfg.family == "hybrid":
+        from repro.models.layers import swiglu
+
+        def rec_step(blk, xc, st):
+            h = rms_norm(xc, blk["norm1"])
+            out, st_new = rg.recurrent_block_step(blk["rec"], h, st)
+            xc = xc + out
+            h = rms_norm(xc, blk["norm2"])
+            xc = xc + swiglu(h, blk["mlp"]["w_gate"], blk["mlp"]["w_up"], blk["mlp"]["w_down"])
+            return xc, st_new
+
+        def body(xc, scanned):
+            sup, st = scanned
+            xc, st1 = rec_step(sup["rec1"], xc, st["rec1"])
+            xc, st2 = rec_step(sup["rec2"], xc, st["rec2"])
+            blk = sup["attn_blk"]
+            h = rms_norm(xc, blk["norm1"])
+            out, kv_new = attn.decode_attention(blk["attn"], h, st["attn"], pos, cfg,
+                                                window=cfg.window)
+            xc = xc + out
+            h = rms_norm(xc, blk["norm2"])
+            xc = xc + swiglu(h, blk["mlp"]["w_gate"], blk["mlp"]["w_up"], blk["mlp"]["w_down"])
+            return xc, {"rec1": st1, "rec2": st2, "attn": kv_new}
+
+        x, new_super = jax.lax.scan(body, x, (params["super"], cache["super"]))
+        new_cache = {"super": new_super}
+        if "tail" in params:
+            def tail_body(xc, scanned):
+                blk, st = scanned
+                return rec_step(blk, xc, st)
+
+            x, new_tail = jax.lax.scan(tail_body, x, (params["tail"], cache["tail"]))
+            new_cache["tail"] = new_tail
+    else:
+        from repro.models.layers import swiglu
+        layer_ids = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+
+        def body(xc, scanned):
+            blk, kv_cache, lid = scanned
+            window = layer_window(cfg, lid)
+            h = rms_norm(xc, blk["norm1"])
+            out, kv_new = attn.decode_attention(blk["attn"], h, kv_cache, pos, cfg,
+                                                window=window, ring=ring)
+            xc = xc + out
+            h = rms_norm(xc, blk["norm2"])
+            if cfg.family == "moe":
+                out, _ = moe_mod.moe_ffn(blk["moe"], h, cfg)
+            else:
+                out = swiglu(h, blk["mlp"]["w_gate"], blk["mlp"]["w_up"], blk["mlp"]["w_down"])
+            return xc + out, kv_new
+
+        x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"], layer_ids))
+        new_cache = {"blocks": new_blocks}
+
+    x = rms_norm(x, params["final_norm"])
+    logits = _project_logits(params, x, cfg)
+    return logits, new_cache

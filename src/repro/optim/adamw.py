@@ -1,0 +1,73 @@
+"""AdamW + LR schedules, pure pytree ops (optimizer states inherit parameter
+shardings under jit, giving ZeRO-sharded optimizer memory for free)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda t: jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), t)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
+                          nu=zeros(params))
+
+    def schedule(self, step):
+        """Linear warmup → cosine decay to min_lr_ratio."""
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        frac = jnp.clip((step - self.warmup_steps)
+                        / max(self.total_steps - self.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return self.lr * warm * (self.min_lr_ratio + (1 - self.min_lr_ratio) * cos)
+
+    def update(self, grads, state: AdamWState, params):
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                             for g in jax.tree_util.tree_leaves(g32)))
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        g32 = jax.tree_util.tree_map(lambda g: g * scale, g32)
+
+        step = state.step + 1
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+        mu = jax.tree_util.tree_map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                                    state.mu, g32)
+        nu = jax.tree_util.tree_map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                                    state.nu, g32)
+        lr = self.schedule(state.step)
+
+        def upd(p, m, v):
+            mhat = m / b1c
+            vhat = v / b2c
+            u = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decay matrices only (norms/biases exempt)
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu), {
+            "grad_norm": gnorm, "lr": lr}

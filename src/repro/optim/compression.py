@@ -1,0 +1,90 @@
+"""Gradient compression for the DP axis, with error feedback.
+
+At 1000-node scale the DP gradient reduce-scatter dominates the inter-pod
+DCNI traffic — exactly the term Gemini's ToE optimizes.  Compression attacks
+the same term from the payload side; we implement the two standard schemes:
+
+  * **top-k sparsification** (keep the largest ``k`` fraction per tensor) with
+    error feedback (the residual is added back next step — provably convergent
+    SGD-EF), and
+  * **int8 stochastic-ish quantization** (per-tensor scale, symmetric).
+
+``compress_decompress`` is the in-graph hook used by ``make_train_step``: on
+real multi-host deployments the compressed representation is what crosses the
+DCNI (the all-reduce runs on the compressed payload); under jit SPMD we model
+it as quantize→dequantize around the reduction point, which preserves the
+numerics (and lets tests measure the accuracy/convergence cost) while the
+bytes saving enters the roofline/Gemini accounting analytically
+(EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_sparsify(g: jax.Array, frac: float = 0.05):
+    """Keep the top ``frac`` of entries by magnitude; return (sparse, residual)."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    kept = jnp.where(mask, flat, 0.0).reshape(g.shape)
+    return kept, g - kept
+
+
+def int8_quantize(g: jax.Array):
+    scale = jnp.maximum(jnp.abs(g).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, scheme: str, frac: float = 0.05):
+    """In-graph lossy round-trip used by the train step (see module doc)."""
+    if scheme == "topk":
+        return jax.tree_util.tree_map(
+            lambda g: topk_sparsify(g.astype(jnp.float32), frac)[0]
+            if g.ndim >= 2 else g, grads)
+    if scheme == "int8":
+        def rt(g):
+            if g.ndim < 2:
+                return g
+            q, s = int8_quantize(g.astype(jnp.float32))
+            return int8_dequantize(q, s)
+        return jax.tree_util.tree_map(rt, grads)
+    raise ValueError(f"unknown compression scheme {scheme!r}")
+
+
+class ErrorFeedback:
+    """Stateful top-k with error feedback for the host-driven training loop."""
+
+    def __init__(self, frac: float = 0.05):
+        self.frac = frac
+        self.residual = None
+
+    def __call__(self, grads):
+        if self.residual is None:
+            self.residual = jax.tree_util.tree_map(
+                lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+        def one(g, r):
+            if g.ndim < 2:
+                return g, r
+            kept, res = topk_sparsify(g.astype(jnp.float32) + r, self.frac)
+            return kept, res
+
+        flat = jax.tree_util.tree_map(one, grads, self.residual)
+        kept = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        self.residual = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                               is_leaf=lambda t: isinstance(t, tuple))
+        return kept
+
+    def compression_ratio(self) -> float:
+        """Payload bytes vs dense f32 (index+value for kept entries)."""
+        return self.frac * 2.0  # 4B value + 4B index per kept / 4B dense

@@ -1,0 +1,178 @@
+"""HLO collective parser: per-collective wire bytes, mesh-axis attribution,
+and pod-level traffic-matrix extraction.
+
+This is the bridge between the compiled step and Gemini's core: the same
+parse feeds (a) the roofline collective term and (b) the inter-pod traffic
+matrix handed to the Gemini controller (per-pod-pair bytes per step).
+
+Accounting (ring algorithms, per-chip wire bytes for a group of size g and
+result payload of ``size`` bytes):
+  all-gather        size · (g-1)/g        (result is the gathered buffer)
+  all-reduce        2 · size · (g-1)/g
+  reduce-scatter    size · (g-1)          (result is the scattered shard)
+  all-to-all        size · (g-1)/g
+  collective-permute size
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_OP_RE = re.compile(
+    r"=\s+(?P<shape>\(?[a-z0-9]+\[[0-9,]*\][^)\s]*\)?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\s*[,}]")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\](?:<=\[([0-9,]+)\])?(?:T\(([0-9,]+)\))?")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(.*?)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    groups: list  # list of lists of device ids (may be empty if unparsed)
+
+    def wire_bytes_per_chip(self) -> float:
+        g = max(self.group_size, 1)
+        s = float(self.result_bytes)
+        if g <= 1:
+            return 0.0
+        if self.kind == "all-gather":
+            return s * (g - 1) / g
+        if self.kind == "all-reduce":
+            return 2.0 * s * (g - 1) / g
+        if self.kind == "reduce-scatter":
+            return s * (g - 1)
+        if self.kind == "all-to-all":
+            return s * (g - 1) / g
+        return s  # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> list:
+    """Extract every collective op (deduplicating -start/-done pairs)."""
+    ops = []
+    seen_start = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        # avoid double counting async pairs: skip "-done" lines
+        if f"{m.group('op')}-done(" in line:
+            continue
+        kind = m.group("op")
+        size = _shape_bytes(m.group("shape"))
+        if kind == "all-gather" and "-start(" in line:
+            pass  # result shape of start is the full gathered buffer
+        groups: list = []
+        gm = _GROUPS_RE.search(line)
+        gi = _GROUPS_IOTA_RE.search(line)
+        group_size = 1
+        if gm:
+            body = gm.group(1)
+            for grp in re.findall(r"\{([0-9,\s]*)\}", "{" + body + "}"):
+                ids = [int(x) for x in grp.split(",") if x.strip()]
+                if ids:
+                    groups.append(ids)
+            if groups:
+                group_size = max(len(g) for g in groups)
+        elif gi:
+            n_groups, per = int(gi.group(1)), int(gi.group(2))
+            group_size = per
+            # iota form: devices = iota(dims) transposed by perm, reshaped
+            # (G, S) — the transpose decides which mesh axes a group spans
+            if gi.group(3):
+                dims = [int(x) for x in gi.group(3).split(",")]
+                ids = np.arange(int(np.prod(dims))).reshape(dims)
+                if gi.group(4):
+                    perm = [int(x) for x in gi.group(4).split(",")]
+                    ids = ids.transpose(perm)
+                groups = ids.reshape(n_groups, per).tolist()
+            else:
+                groups = [list(range(i * per, (i + 1) * per))
+                          for i in range(n_groups)]
+        elif kind == "collective-permute":
+            pm = _PAIRS_RE.search(line)
+            group_size = 2 if pm else 1
+        ops.append(CollectiveOp(kind=kind, result_bytes=size,
+                                group_size=group_size, groups=groups))
+    return ops
+
+
+def collective_summary(ops: list) -> dict:
+    out: dict = {k: {"count": 0, "result_bytes": 0, "wire_bytes_per_chip": 0.0}
+                 for k in _COLLECTIVES}
+    for op in ops:
+        d = out[op.kind]
+        d["count"] += 1
+        d["result_bytes"] += op.result_bytes
+        d["wire_bytes_per_chip"] += op.wire_bytes_per_chip()
+    out["total_wire_bytes_per_chip"] = sum(
+        out[k]["wire_bytes_per_chip"] for k in _COLLECTIVES)
+    return out
+
+
+def pod_traffic_matrix(ops: list, devices_per_pod: int, n_pods: int) -> np.ndarray:
+    """Project collectives onto a pod-level TM (bytes crossing each pod pair
+    per step).  For a group spanning several pods, ring accounting sends each
+    pod-cut ``payload/g_pods`` bytes each way per gathered/reduced buffer;
+    we attribute uniformly across the pod pairs the group spans.
+    """
+    tm = np.zeros((n_pods, n_pods))
+    for op in ops:
+        if not op.groups:
+            continue
+        for grp in op.groups:
+            pods = sorted({d // devices_per_pod for d in grp})
+            if len(pods) < 2:
+                continue
+            per_chip = op.wire_bytes_per_chip()
+            chips_per_pod = max(len(grp) // len(pods), 1)
+            # bytes leaving each pod ≈ per_chip · chips_in_pod · (frac outside)
+            frac_out = (len(pods) - 1) / len(pods)
+            pod_bytes = per_chip * chips_per_pod * frac_out
+            share = pod_bytes / (len(pods) - 1)
+            for i in pods:
+                for j in pods:
+                    if i != j:
+                        tm[i, j] += share
+    return tm
+
+
+def traffic_to_commodities(tm: np.ndarray) -> np.ndarray:
+    """Dense (V, V) TM -> flat (C,) commodity vector (graph.py enumeration)."""
+    v = tm.shape[0]
+    out = []
+    for i in range(v):
+        for j in range(v):
+            if i != j:
+                out.append(tm[i, j])
+    return np.asarray(out)

@@ -1,0 +1,32 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must see
+the single real CPU device; only launch/dryrun.py forces 512 host devices."""
+
+import numpy as np
+import pytest
+
+from repro.core.fleet import FLEET_SPECS, make_fabric, make_trace
+
+
+@pytest.fixture(scope="session")
+def small_fabric():
+    return make_fabric(FLEET_SPECS[0])
+
+
+@pytest.fixture(scope="session")
+def small_trace(small_fabric):
+    return make_trace(FLEET_SPECS[0], small_fabric, days=9.0, interval_minutes=120.0)
+
+
+@pytest.fixture(scope="session")
+def volatile_fabric():
+    return make_fabric(FLEET_SPECS[2])  # F3: least-bounded fabric
+
+
+@pytest.fixture(scope="session")
+def volatile_trace(volatile_fabric):
+    return make_trace(FLEET_SPECS[2], volatile_fabric, days=9.0, interval_minutes=120.0)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

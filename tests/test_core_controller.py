@@ -1,0 +1,82 @@
+"""Controller + predictor behaviour (paper §4.6) and baseline comparisons."""
+
+import numpy as np
+import pytest
+
+from repro.core import (STRATEGIES, ControllerConfig, SolverConfig, Strategy,
+                        pick_best, predict, run_controller)
+from repro.core.baselines import clos_metrics, uniform_vlb_metrics
+from repro.core.simulator import p999
+
+CC = ControllerConfig(routing_interval_hours=12.0, topology_interval_days=3.0,
+                      aggregation_days=3.0, k_critical=4)
+SC = SolverConfig(stage1_method="scaled")
+
+
+@pytest.fixture(scope="module")
+def gemini_run(small_fabric, small_trace):
+    return {
+        s.name: run_controller(small_fabric, small_trace, s, CC, SC)
+        for s in STRATEGIES
+    }
+
+
+def test_controller_counts(small_fabric, small_trace, gemini_run):
+    res = gemini_run["(nonuniform,nohedge)"]
+    ipd = small_trace.intervals_per_day()
+    expected_routing = len(range(int(3 * ipd), small_trace.n_intervals,
+                                 int(12 * ipd / 24)))
+    assert res.n_routing_updates == expected_routing
+    assert res.n_topology_updates >= 2
+    uni = gemini_run["(uniform,nohedge)"]
+    assert uni.n_topology_updates == 0
+
+
+def test_metrics_cover_post_warmup(small_trace, gemini_run):
+    res = gemini_run["(uniform,nohedge)"]
+    warm = int(3 * small_trace.intervals_per_day())
+    assert res.metrics.mlu.shape[0] == small_trace.n_intervals - warm
+
+
+def test_gemini_beats_demand_oblivious(small_fabric, small_trace, gemini_run):
+    """Paper Fig. 18: Gemini's best strategy ≤ (Uniform, VLB) and same-cost
+    Clos on p99.9 MLU."""
+    best = min(p999(r.metrics.mlu) for r in gemini_run.values())
+    warm = int(3 * small_trace.intervals_per_day())
+    test_slice = small_trace.slice_days(3.0, 1e9)
+    vlb = p999(uniform_vlb_metrics(small_fabric, test_slice).mlu)
+    clos2 = p999(clos_metrics(small_fabric, test_slice, 2.0).mlu)
+    assert best <= vlb * 1.05
+    assert best <= clos2 * 1.05
+
+
+def test_full_clos_is_lower_bound_like(small_fabric, small_trace, gemini_run):
+    """Full Clos (2x cost) should be at least as good as any strategy here."""
+    best = min(p999(r.metrics.mlu) for r in gemini_run.values())
+    test_slice = small_trace.slice_days(3.0, 1e9)
+    full = p999(clos_metrics(small_fabric, test_slice, 1.0).mlu)
+    assert full <= best * 1.5 + 1e-9  # loose: Full Clos can't be much worse
+
+
+def test_hedged_stretch_at_most_two(gemini_run):
+    for name, res in gemini_run.items():
+        assert p999(res.metrics.stretch) <= 2.0 + 1e-6, name
+
+
+def test_pick_best_cushion_logic():
+    per = {
+        "a": {"p999_mlu": 1.00, "p999_alu": 0.50},
+        "b": {"p999_mlu": 1.04, "p999_alu": 0.20},  # within 5% cushion, lower ALU
+        "c": {"p999_mlu": 1.20, "p999_alu": 0.01},  # outside cushion
+    }
+    assert pick_best(per, cushion=0.05) == "b"
+    assert pick_best(per, cushion=0.0) == "a"
+
+
+def test_predictor_runs_and_picks_valid(small_fabric, small_trace):
+    pred = predict(small_fabric, small_trace, CC, SC,
+                   strategies=(Strategy(False, False), Strategy(True, False)))
+    assert pred.strategy.name in pred.per_strategy
+    assert len(pred.per_strategy) == 2
+    for s in pred.per_strategy.values():
+        assert np.isfinite(s["p999_mlu"])

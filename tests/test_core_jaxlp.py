@@ -1,0 +1,80 @@
+"""PDHG (JAX) routing solver vs scipy/HiGHS oracle, across random instances."""
+
+import numpy as np
+import pytest
+
+from repro.core.clustering import critical_tms
+from repro.core.graph import Fabric, uniform_topology
+from repro.core.jaxlp import JaxRoutingSolver, project_simplex_rows
+from repro.core.lp import LpBuilder, estimate_delta
+from repro.core.paths import build_paths
+
+
+def test_simplex_projection_properties(rng):
+    import jax.numpy as jnp
+
+    x = jnp.asarray(rng.normal(0, 2, (40, 7)))
+    p = np.asarray(project_simplex_rows(x))
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, atol=1e-5)
+    assert (p >= -1e-7).all()
+    # already-feasible rows are fixed points
+    feas = jnp.asarray(np.full((3, 7), 1.0 / 7))
+    np.testing.assert_allclose(np.asarray(project_simplex_rows(feas)), 1.0 / 7, atol=1e-6)
+
+
+@pytest.mark.parametrize("seed,v", [(0, 5), (1, 6), (2, 8)])
+def test_pdhg_matches_scipy_stage1(seed, v):
+    rng = np.random.default_rng(seed)
+    fabric = Fabric.homogeneous(f"r{seed}", v, radix=2 * (v - 1) * 2, speed=100.0)
+    window = rng.gamma(2.0, 40.0, size=(50, v * (v - 1)))
+    tms = critical_tms(window, k=4, seed=seed)
+    cap = fabric.capacities(uniform_topology(fabric))
+    builder = LpBuilder(fabric, build_paths(v), tms)
+    u_scipy = builder.solve_stage1_fixed_topology(cap).scalar
+    js = JaxRoutingSolver(fabric, tms.shape[0], max_iters=3000)
+    _, u_pdhg = js.solve_mlu(tms, cap)
+    assert u_pdhg == pytest.approx(u_scipy, rel=2e-2)
+    assert u_pdhg >= u_scipy - 1e-6  # PDHG value is a feasible (upper) value
+
+
+def test_pdhg_stage2_risk_close_to_scipy():
+    rng = np.random.default_rng(5)
+    v = 6
+    fabric = Fabric.homogeneous("h", v, radix=40, speed=100.0)
+    window = rng.gamma(2.0, 30.0, size=(60, v * (v - 1)))
+    tms = critical_tms(window, k=4)
+    delta = estimate_delta(window)
+    cap = fabric.capacities(uniform_topology(fabric))
+    builder = LpBuilder(fabric, build_paths(v), tms, delta=delta)
+    u_star = builder.solve_stage1_fixed_topology(cap).scalar * 1.005
+    r_scipy = builder.solve_stage2_fixed_topology(cap, u_star).scalar
+    js = JaxRoutingSolver(fabric, tms.shape[0], max_iters=4000)
+    _, r_pdhg, u_chk = js.solve_risk(tms, cap, u_star, delta)
+    assert r_pdhg <= r_scipy * 1.15 + 1e-6
+    assert u_chk <= u_star * 1.02 + 1e-6
+
+
+def test_pdhg_stage3_feasible_and_near_optimal():
+    rng = np.random.default_rng(7)
+    v = 6
+    fabric = Fabric.homogeneous("s3", v, radix=40, speed=100.0)
+    window = rng.gamma(2.0, 30.0, size=(60, v * (v - 1)))
+    tms = critical_tms(window, k=4)
+    paths = build_paths(v)
+    cap = fabric.capacities(uniform_topology(fabric))
+    builder = LpBuilder(fabric, paths, tms)
+    u_star = builder.solve_stage1_fixed_topology(cap).scalar * 1.005
+    f_scipy = builder.solve_stage3(u_star, None, cap).f
+    js = JaxRoutingSolver(fabric, tms.shape[0], max_iters=4000)
+    f_pdhg = js.solve_stretch(tms, cap, u_star, None, 0.0)
+    dsum = tms.sum(0)
+    obj = lambda f: float((dsum[paths.path_commodity] * paths.path_n_edges * f).sum())
+    assert obj(f_pdhg) <= obj(f_scipy) * 1.05
+    # feasibility (allow first-order tolerance)
+    load = np.zeros((tms.shape[0], paths.n_directed))
+    for hop in range(2):
+        e = paths.path_edges[:, hop]
+        m = e >= 0
+        for t in range(tms.shape[0]):
+            np.add.at(load[t], e[m], f_pdhg[m] * tms[t, paths.path_commodity[m]])
+    assert (load / cap[None, :]).max() <= u_star * 1.02

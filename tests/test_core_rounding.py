@@ -1,0 +1,135 @@
+"""Property tests for Algorithm 1 (paper Theorem 3) and patch panels (Thm 4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.graph import Fabric, trunk_index, uniform_topology
+from repro.core.patch_panels import assign_panels, two_factorize
+from repro.core.rounding import fill_to_targets, realize, round_trunks
+
+
+def _degrees(n_pods, n_e):
+    t = trunk_index(n_pods)
+    deg = np.zeros(n_pods)
+    np.add.at(deg, t[:, 0], n_e)
+    np.add.at(deg, t[:, 1], n_e)
+    return deg
+
+
+@st.composite
+def fractional_even_graph(draw):
+    """Random fractional trunk graph with even integer node degrees: generated
+    by summing random fractional edge perturbations that cancel per node, on
+    top of an even-integer base graph."""
+    v = draw(st.integers(4, 9))
+    e_u = v * (v - 1) // 2
+    seed = draw(st.integers(0, 2**32 - 1))
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, 6, size=e_u).astype(np.float64)
+    # fix parity: make every degree even by adding 1 along a cycle through odd nodes
+    deg = _degrees(v, base)
+    odd = np.nonzero(deg.astype(np.int64) % 2)[0]
+    t = trunk_index(v)
+    lut = {(int(i), int(j)): e for e, (i, j) in enumerate(t)}
+    for a, b in zip(odd[0::2], odd[1::2]):
+        i, j = (int(a), int(b)) if a < b else (int(b), int(a))
+        base[lut[(i, j)]] += 1
+    # add degree-preserving fractional noise along random triangles
+    for _ in range(draw(st.integers(0, 12))):
+        i, j, k = rng.choice(v, size=3, replace=False)
+        eps = rng.uniform(-0.4, 0.4)
+        edges = [lut[tuple(sorted((int(i), int(j))))],
+                 lut[tuple(sorted((int(j), int(k))))],
+                 lut[tuple(sorted((int(i), int(k))))]]
+        # i-j and i-k get +eps, j-k gets -eps keeps i's degree +2eps... use a
+        # cycle instead: +eps on (i,j), -eps on (j,k), +eps on (k,i) changes
+        # deg(i) by 2eps. Correct degree-preserving move on a triangle is
+        # +eps, +eps, +eps? No — use 4-cycles when v >= 4.
+        del edges, eps
+        a, b, c, d = rng.choice(v, size=4, replace=False)
+        eps = rng.uniform(-0.4, 0.4)
+        e_ab = lut[tuple(sorted((int(a), int(b))))]
+        e_bc = lut[tuple(sorted((int(b), int(c))))]
+        e_cd = lut[tuple(sorted((int(c), int(d))))]
+        e_da = lut[tuple(sorted((int(d), int(a))))]
+        new = base.copy()
+        new[e_ab] += eps
+        new[e_bc] -= eps
+        new[e_cd] += eps
+        new[e_da] -= eps
+        if (new >= 0).all():
+            base = new
+    return v, base
+
+
+@given(fractional_even_graph())
+@settings(max_examples=60, deadline=None)
+def test_round_trunks_theorem3(vg):
+    """Theorem 3: same node degrees, weights in {floor, floor+1}, no self-loops."""
+    v, n_e = vg
+    deg_in = _degrees(v, n_e)
+    assert np.allclose(deg_in, np.rint(deg_in)) and (np.rint(deg_in) % 2 == 0).all()
+    n_int = round_trunks(v, n_e)
+    deg_out = _degrees(v, n_int)
+    np.testing.assert_allclose(deg_out, deg_in, atol=1e-9)
+    floor = np.floor(n_e + 1e-9)
+    assert ((n_int == floor) | (n_int == floor + 1)).all()
+    assert (n_int >= 0).all()
+
+
+@given(fractional_even_graph())
+@settings(max_examples=30, deadline=None)
+def test_two_factorize_covers_graph(vg):
+    """Factors partition the multigraph; every node has degree ≤ 2 per factor."""
+    v, n_e = vg
+    n_int = round_trunks(v, n_e)
+    factors = two_factorize(v, n_int)
+    t = trunk_index(v)
+    lut = {(int(i), int(j)): e for e, (i, j) in enumerate(t)}
+    recon = np.zeros_like(n_int)
+    for factor in factors:
+        fdeg = np.zeros(v)
+        for i, j in factor:
+            recon[lut[(min(i, j), max(i, j))]] += 1
+            fdeg[i] += 1
+            fdeg[j] += 1
+        assert (fdeg <= 2).all(), "a 2-factor may touch each node at most twice"
+    np.testing.assert_array_equal(recon, n_int)
+
+
+def test_panel_assignment_balanced(small_fabric):
+    n_uni = uniform_topology(small_fabric)
+    n_int, targets = realize(small_fabric, n_uni)
+    pa = assign_panels(small_fabric.n_pods, n_int, n_panels=4)
+    per = pa.links_per_pod_per_panel(small_fabric.n_pods)
+    assert per.sum(axis=0).tolist() == targets.tolist()
+    # Theorem 4 balance: per-pod links per panel within 2x of perfect balance
+    ideal = targets / 4
+    assert (per <= np.ceil(ideal[None, :] * 2)).all()
+
+
+def test_fill_to_targets_even_and_bounded(small_fabric):
+    rng = np.random.default_rng(3)
+    n_e = rng.uniform(0, 1.5, small_fabric.n_trunks)
+    # scale to respect radix
+    deg = _degrees(small_fabric.n_pods, n_e)
+    n_e *= 0.5 * (small_fabric.radix / np.maximum(deg, 1e-9)).min()
+    filled, targets = fill_to_targets(small_fabric, n_e)
+    deg = _degrees(small_fabric.n_pods, filled)
+    np.testing.assert_allclose(deg, targets, atol=1e-6)
+    assert (targets % 2 == 0).all()
+    assert (targets <= small_fabric.radix).all()
+    assert (filled >= n_e - 1e-12).all(), "fill never removes capacity"
+
+
+def test_realize_dominant_pod_capped():
+    """One pod with far more ports than the rest combined: surplus goes dark."""
+    fabric = Fabric(name="dom", radix=np.array([64, 4, 4, 4]),
+                    speed=np.array([100.0] * 4))
+    n_e = np.zeros(fabric.n_trunks)
+    n_int, targets = realize(fabric, n_e)
+    assert targets[0] <= 12  # at most sum of others
+    deg = _degrees(fabric.n_pods, n_int)
+    np.testing.assert_allclose(deg, targets)

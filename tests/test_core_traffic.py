@@ -1,0 +1,90 @@
+"""Traffic model: DMR/boundedness/skew stats, clustering, fleet calibration."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.clustering import critical_tms, hull_contains
+from repro.core.fleet import FLEET_SPECS, make_fabric, make_trace
+from repro.core.traffic import (Trace, dmr, skew_fraction_for_share,
+                                well_bounded_fraction)
+
+
+def test_dmr_bounded_for_constant_traffic():
+    d = np.ones((10 * 24, 6)) * 5.0
+    tr = Trace("c", d, 60.0, 3)
+    r = dmr(tr, train_days=7)
+    np.testing.assert_allclose(r, 1.0)
+    assert well_bounded_fraction(tr) == 1.0
+
+
+def test_dmr_detects_burst():
+    d = np.ones((10 * 24, 6))
+    d[9 * 24 + 3, 2] = 50.0  # burst on day 10, commodity 2
+    tr = Trace("b", d, 60.0, 3)
+    r = dmr(tr, train_days=7)
+    assert r.max() == pytest.approx(50.0)
+
+
+def test_skew_extremes():
+    uniform = Trace("u", np.ones((8, 6)), 60.0, 3)
+    assert skew_fraction_for_share(uniform, 0.8) >= 0.8
+    skewed = np.full((8, 6), 1e-8)
+    skewed[:, 0] = 100.0
+    assert skew_fraction_for_share(Trace("s", skewed, 60.0, 3), 0.8) <= 0.2
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 12))
+@settings(max_examples=25, deadline=None)
+def test_critical_tms_dominate_window(seed, k):
+    """Hull-approximation guarantee (§4.3): every TM of the window is
+    element-wise dominated by the max of the critical TMs."""
+    rng = np.random.default_rng(seed)
+    window = rng.gamma(2.0, 3.0, size=(40, 12))
+    crit = critical_tms(window, k=k, seed=seed)
+    assert crit.shape[0] <= k
+    for t in range(window.shape[0]):
+        assert hull_contains(crit, window[t])
+
+
+def test_maximal_tm_is_k1_special_case():
+    rng = np.random.default_rng(0)
+    window = rng.gamma(2.0, 3.0, size=(30, 12))
+    crit = critical_tms(window, k=1)
+    np.testing.assert_allclose(crit[0], window.max(axis=0))
+
+
+def test_more_clusters_tighter_hull():
+    """k=12 hull volume (sum of criticals) ≤ k=1 — finer clusters are tighter."""
+    rng = np.random.default_rng(1)
+    window = np.concatenate([rng.gamma(2.0, s, size=(30, 12)) for s in (1.0, 5.0)])
+    c1 = critical_tms(window, k=1).sum()
+    c12 = critical_tms(window, k=12)
+    assert c12.max(axis=0).sum() <= c1 + 1e-9
+
+
+def test_fleet_calibration_matches_paper():
+    """§2 fleet statistics: most fabrics mostly-bounded, several skewed,
+    at least one poorly-bounded fabric (the paper's F3 analogue).
+
+    NOTE: boundedness is cadence-dependent (p99 DMR vs a trailing max over
+    7·ipd samples), so this must use an interval close to the paper's 5-minute
+    cadence; coarse sampling makes even stationary traffic look unbounded."""
+    bounded, skews = [], []
+    for spec in FLEET_SPECS[:8]:
+        fab = make_fabric(spec)
+        tr = make_trace(spec, fab, days=16.0, interval_minutes=30.0)
+        bounded.append(well_bounded_fraction(tr))
+        skews.append(skew_fraction_for_share(tr, 0.8))
+    bounded = np.asarray(bounded)
+    assert (bounded > 0.9).mean() >= 0.5, f"most fabrics mostly-bounded: {bounded}"
+    assert min(skews) < 0.45, f"some fabrics skewed: {skews}"
+    assert bounded.min() < 0.97, "fleet must include volatile fabrics"
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError):
+        Trace("bad", np.ones((4, 5)), 5.0, 3)  # wrong C for 3 pods
+    with pytest.raises(ValueError):
+        Trace("neg", -np.ones((4, 6)), 5.0, 3)

@@ -1,0 +1,119 @@
+"""HLO analysis layer: collective parsing (incl. iota replica groups), ring
+wire accounting, pod-TM attribution, and trip-count-aware cost analysis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.hlo_cost import analyze
+from repro.runtime.hlo_traffic import (CollectiveOp, collective_summary,
+                                       parse_collectives, pod_traffic_matrix)
+
+
+def test_parse_explicit_groups():
+    line = ("  %ar = f32[1024]{0} all-reduce(%x), channel_id=1, "
+            "replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add")
+    ops = parse_collectives(line)
+    assert len(ops) == 1
+    assert ops[0].kind == "all-reduce"
+    assert ops[0].group_size == 4
+    assert ops[0].result_bytes == 4096
+    # ring all-reduce: 2·s·(g-1)/g
+    assert ops[0].wire_bytes_per_chip() == pytest.approx(2 * 4096 * 3 / 4)
+
+
+def test_parse_iota_groups_transposed():
+    """iota groups with a transpose must reconstruct the true device lists
+    (pod-spanning DP groups have stride = model size, not contiguous ids)."""
+    line = ("  %ag = bf16[64,128]{1,0} all-gather(%x), channel_id=2, "
+            "replica_groups=[16,32]<=[2,16,16]T(1,0,2), dimensions={0}")
+    ops = parse_collectives(line)
+    assert ops[0].group_size == 32
+    groups = ops[0].groups
+    assert len(groups) == 16
+    # with mesh (pod=2, data=16, model=16) and T(1,0,2), each group holds the
+    # same model/data index across both pods -> spans pods
+    for g in groups:
+        pods = {d // 256 for d in g}
+        assert pods == {0, 1}
+
+
+def test_parse_iota_groups_contiguous_pod_local():
+    line = ("  %rs = f32[32]{0} reduce-scatter(%x), "
+            "replica_groups=[32,16]<=[512], dimensions={0}, to_apply=%add")
+    ops = parse_collectives(line)
+    for g in ops[0].groups:
+        assert len({d // 256 for d in g}) == 1  # contiguous 16s stay in-pod
+
+
+def test_pod_tm_attribution():
+    spanning = CollectiveOp("all-reduce", 1000, 4, [[0, 1, 256, 257]])
+    local = CollectiveOp("all-reduce", 1000, 4, [[0, 1, 2, 3]])
+    tm = pod_traffic_matrix([spanning, local], devices_per_pod=256, n_pods=2)
+    assert tm[0, 1] > 0 and tm[1, 0] > 0
+    assert tm[0, 1] == tm[1, 0]
+    tm_local = pod_traffic_matrix([local], devices_per_pod=256, n_pods=2)
+    assert tm_local.sum() == 0
+
+
+def test_wire_accounting_kinds():
+    mk = lambda kind: CollectiveOp(kind, 1000, 4, [])
+    assert mk("all-gather").wire_bytes_per_chip() == pytest.approx(750)
+    assert mk("all-reduce").wire_bytes_per_chip() == pytest.approx(1500)
+    assert mk("reduce-scatter").wire_bytes_per_chip() == pytest.approx(3000)
+    assert mk("collective-permute").wire_bytes_per_chip() == 1000
+    assert CollectiveOp("all-reduce", 1000, 1, []).wire_bytes_per_chip() == 0
+
+
+def test_cost_analyze_scales_while_loops():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    res = analyze(jax.jit(f).lower(x, w).compile().as_text())
+    assert res.flops == pytest.approx(7 * 2 * 64 * 128 * 128)
+    assert res.unknown_trip_loops == 0
+    s = res.summary()
+    assert s["collectives"]["total_wire_bytes_per_chip"] == 0
+
+
+def test_cost_analyze_nested_loops():
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    res = analyze(jax.jit(g).lower(x, w).compile().as_text())
+    assert res.flops == pytest.approx(15 * 2 * 32 * 64 * 64)
+
+
+def test_dryrun_artifacts_consistent():
+    """If dry-run artifacts exist, they must be complete and coherent."""
+    import json
+    import pathlib
+
+    d = pathlib.Path(__file__).resolve().parents[1] / "benchmarks" / "results" / "dryrun"
+    files = [f for f in d.glob("*.json") if len(f.stem.split("__")) == 3]
+    if len(files) < 80:
+        pytest.skip("dry-run not fully populated")
+    stats = {"ok": 0, "skipped": 0, "failed": 0}
+    for f in files:
+        rec = json.loads(f.read_text())
+        stats[rec["status"]] += 1
+        if rec["status"] == "ok":
+            assert rec["flops"] > 0, f.name
+            assert rec["hbm_bytes"] > 0, f.name
+            assert rec["unknown_trip_loops"] == 0, f.name
+    assert stats["failed"] == 0
+    assert stats["ok"] == 68 and stats["skipped"] == 12

@@ -1,0 +1,104 @@
+"""Shape/dtype sweeps: every Pallas kernel vs its pure-jnp oracle
+(interpret mode on CPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa
+from repro.kernels.rglru_scan import ops as rl
+from repro.kernels.ssd_chunk import ops as sd
+
+
+@pytest.mark.parametrize("b,sq,h,kv,hd", [
+    (2, 128, 4, 2, 64), (1, 256, 8, 8, 128), (2, 130, 4, 1, 32),
+    (1, 65, 2, 2, 100), (3, 64, 6, 3, 64),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 48), (False, 0)])
+def test_flash_attention_sweep(b, sq, h, kv, hd, causal, window, rng):
+    q = jnp.asarray(rng.normal(0, 1, (b, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, sq, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, sq, kv, hd)), jnp.float32)
+    ref = fa.flash_attention(q, k, v, causal=causal, window=window, backend="ref")
+    out = fa.flash_attention(q, k, v, causal=causal, window=window, backend="pallas")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-3), (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, tol, rng):
+    q = jnp.asarray(rng.normal(0, 1, (2, 128, 4, 64)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (2, 128, 2, 64)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (2, 128, 2, 64)), dtype)
+    ref = fa.flash_attention(q, k, v, backend="ref")
+    out = fa.flash_attention(q, k, v, backend="pallas")
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_matches_model_attention(rng):
+    """Kernel agrees with the model-side attention (the dry-run path)."""
+    from repro.configs import get_arch
+    from repro.models import attention as mattn
+
+    cfg = get_arch("qwen3-14b").reduced()
+    b, s, hd = 2, 64, cfg.resolved_head_dim
+    q = jnp.asarray(rng.normal(0, 1, (b, s, cfg.n_heads, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, cfg.n_kv_heads, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, cfg.n_kv_heads, hd)), jnp.float32)
+    mask = jnp.broadcast_to(mattn.causal_mask(s, 0)[None], (b, s, s))
+    model_out = mattn._sdpa(q, k, v, mask, cfg)
+    kern_out = fa.flash_attention(q, k, v, causal=True, window=0, backend="pallas")
+    np.testing.assert_allclose(np.asarray(kern_out), np.asarray(model_out),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("b,s,d", [(2, 128, 128), (3, 200, 96), (1, 64, 256),
+                                   (4, 37, 31), (2, 513, 130)])
+def test_rglru_scan_sweep(b, s, d, rng):
+    a = jnp.asarray(rng.uniform(0.8, 0.999, (b, s, d)), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 0.5, (b, s, d)), jnp.float32)
+    ref = rl.rglru_scan(a, x, backend="ref")
+    out = rl.rglru_scan(a, x, backend="pallas")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_matches_model_block(rng):
+    from repro.models import rglru as mrg
+    from repro.configs import get_arch
+
+    cfg = get_arch("recurrentgemma-9b").reduced()
+    p = mrg.init_rglru_params(__import__("jax").random.key(0), cfg)
+    x = jnp.asarray(rng.normal(0, 1, (2, 64, cfg.d_model)), jnp.float32)
+    a, b = mrg._gates(p, x)
+    ref = mrg.rglru_scan(p, x).astype(jnp.float32)
+    out = rl.rglru_scan(a, b, backend="pallas")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("B,H,S,P,N,chunk", [
+    (1, 2, 128, 64, 32, 64), (2, 3, 256, 64, 128, 128), (1, 1, 64, 32, 16, 32),
+    (1, 4, 512, 64, 128, 128),
+])
+def test_ssd_chunk_sweep(B, H, S, P, N, chunk, rng):
+    x = jnp.asarray(rng.normal(0, 1, (B, H, S, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, H, S, 1)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(1, 8, (H, 1, 1, 1)), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 1, (B, 1, S, N)), jnp.float32)
+    c = jnp.asarray(rng.normal(0, 1, (B, 1, S, N)), jnp.float32)
+    ref = sd.ssd_scan(x, dt, a, b, c, chunk, backend="ref")
+    out = sd.ssd_scan(x, dt, a, b, c, chunk, backend="pallas")
+    rel = np.abs(np.asarray(out) - np.asarray(ref)).max() / np.abs(np.asarray(ref)).max()
+    assert rel < 1e-3
+
+
+def test_ssd_chunk_invariance(rng):
+    """Chunk size must not change the result (state passing is exact)."""
+    B, H, S, P, N = 1, 2, 256, 64, 64
+    x = jnp.asarray(rng.normal(0, 1, (B, H, S, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, H, S, 1)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(1, 8, (H, 1, 1, 1)), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 1, (B, 1, S, N)), jnp.float32)
+    c = jnp.asarray(rng.normal(0, 1, (B, 1, S, N)), jnp.float32)
+    o64 = sd.ssd_scan(x, dt, a, b, c, 64, backend="pallas")
+    o128 = sd.ssd_scan(x, dt, a, b, c, 128, backend="pallas")
+    np.testing.assert_allclose(np.asarray(o64), np.asarray(o128), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,183 @@
+"""Runtime substrate: data determinism/resume, checkpoint atomicity + restart,
+straggler counters, elastic remesh, compression, traffic extraction."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_arch
+from repro.data.pipeline import DataConfig, Pipeline, SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import StepConfig
+from repro.models.api import build_model
+from repro.optim.adamw import AdamW
+from repro.optim.compression import (ErrorFeedback, compress_decompress,
+                                     int8_dequantize, int8_quantize,
+                                     topk_sparsify)
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def _data_cfg(cfg, batch=4, seq=32):
+    return DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=batch)
+
+
+def test_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(vocab=128, seq_len=16, global_batch=4)
+    src = SyntheticLM(cfg)
+    b5a = src.batch_at(5)
+    b5b = src.batch_at(5)
+    np.testing.assert_array_equal(b5a["tokens"], b5b["tokens"])
+    # iterating from 0 and from a resume point yields the same step batches
+    p1 = Pipeline(cfg)
+    seq = [next(p1) for _ in range(4)]
+    p1.close()
+    p2 = Pipeline(cfg, start_step=2)
+    b2 = next(p2)
+    p2.close()
+    np.testing.assert_array_equal(seq[2]["tokens"], b2["tokens"])
+    # labels are tokens shifted by one
+    np.testing.assert_array_equal(seq[0]["tokens"][:, 1:], seq[0]["labels"][:, :-1])
+
+
+def test_pipeline_host_sharding():
+    full = DataConfig(vocab=64, seq_len=8, global_batch=8)
+    h0 = DataConfig(vocab=64, seq_len=8, global_batch=8, n_hosts=2, host_id=0)
+    h1 = DataConfig(vocab=64, seq_len=8, global_batch=8, n_hosts=2, host_id=1)
+    b0 = SyntheticLM(h0).batch_at(3)
+    b1 = SyntheticLM(h1).batch_at(3)
+    assert b0["tokens"].shape[0] == 4 and b1["tokens"].shape[0] == 4
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_checkpoint_atomic_keepk(tmp_path):
+    cm = CheckpointManager(tmp_path, keep=2)
+    state = {"a": np.arange(6).reshape(2, 3), "b": {"c": np.ones(4)}}
+    for s in (10, 20, 30):
+        cm.save(s, state, meta={"x": s})
+    assert cm.latest_step() == 30
+    ckpts = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(ckpts) == 2, "keep-k garbage collection"
+    restored, meta = cm.restore(state)
+    np.testing.assert_array_equal(restored["a"], state["a"])
+    assert meta["x"] == 30
+    assert not list(tmp_path.glob(".tmp_*")), "no partial writes left behind"
+
+
+def test_trainer_checkpoint_restart(tmp_path):
+    cfg = get_arch("mamba2-130m").reduced()
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    opt = AdamW(lr=1e-3, warmup_steps=2, total_steps=20)
+    tc = TrainerConfig(total_steps=6, checkpoint_every=3, n_pods=1,
+                       devices_per_pod=1)
+    tr = Trainer(model, opt, mesh, _data_cfg(cfg), StepConfig(), tc, tmp_path)
+    out1 = tr.run(resume=False)
+    assert out1["last_step"] == 6
+    assert np.isfinite(out1["losses"]).all()
+    # "crash" and restart: resumes from step 6 checkpoint, runs to 9
+    tc2 = TrainerConfig(total_steps=9, checkpoint_every=3, n_pods=1,
+                        devices_per_pod=1)
+    tr2 = Trainer(model, opt, mesh, _data_cfg(cfg), StepConfig(), tc2, tmp_path)
+    out2 = tr2.run(resume=True)
+    assert out2["stats"]["restarts"] == 1
+    assert out2["last_step"] == 9
+    assert len(out2["losses"]) == 3, "only the post-restore steps run"
+
+
+def test_trainer_loss_decreases(tmp_path):
+    cfg = get_arch("internvl2-1b").reduced()
+    # plain dense text training on the reduced backbone
+    import dataclasses
+    cfg = dataclasses.replace(cfg, family="dense", frontend="", frontend_tokens=0,
+                              name="tiny-dense")
+    model = build_model(cfg)
+    opt = AdamW(lr=1e-2, warmup_steps=5, total_steps=60, grad_clip=1.0)
+    tc = TrainerConfig(total_steps=50, checkpoint_every=100, log_every=100)
+    tr = Trainer(model, opt, make_host_mesh(), _data_cfg(cfg, batch=8, seq=64),
+                 StepConfig(), tc, tmp_path)
+    out = tr.run(resume=False)
+    first = np.mean(out["losses"][:5])
+    last = np.mean(out["losses"][-5:])
+    assert last < first - 0.2, f"no learning: {first:.3f} -> {last:.3f}"
+
+
+def test_trainer_traffic_extraction(tmp_path):
+    cfg = get_arch("mamba2-130m").reduced()
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    opt = AdamW()
+    tc = TrainerConfig(total_steps=1, devices_per_pod=1, n_pods=1)
+    tr = Trainer(model, opt, mesh, _data_cfg(cfg), StepConfig(), tc, tmp_path)
+    from repro.parallel.sharding import use_mesh
+    with use_mesh(mesh):
+        params = model.init(jax.random.key(0))
+        opt_state = opt.init(params)
+    batch = SyntheticLM(_data_cfg(cfg)).batch_at(0)
+    tm = tr.extract_traffic(params, opt_state, batch)
+    assert tm.shape == (1, 1)
+    assert tr.collectives is not None  # single-device: zero collective bytes
+
+
+def test_remesh_preserves_state(tmp_path):
+    cfg = get_arch("mamba2-130m").reduced()
+    model = build_model(cfg)
+    opt = AdamW()
+    mesh1 = make_host_mesh()
+    tc = TrainerConfig(total_steps=2, checkpoint_every=10)
+    tr = Trainer(model, opt, mesh1, _data_cfg(cfg), StepConfig(), tc, tmp_path)
+    from repro.parallel.sharding import use_mesh
+    with use_mesh(mesh1):
+        params = model.init(jax.random.key(0))
+        opt_state = opt.init(params)
+    before = np.asarray(jax.tree_util.tree_leaves(params)[0], np.float32)
+    params2, opt2 = tr.remesh(make_host_mesh(), params, opt_state)
+    after = np.asarray(jax.tree_util.tree_leaves(params2)[0], np.float32)
+    np.testing.assert_array_equal(before, after)
+    assert tr.stats["remesh_events"] == 1
+
+
+# ---- compression -------------------------------------------------------------
+
+def test_topk_sparsify(rng):
+    g = jnp.asarray(rng.normal(0, 1, (64, 64)), jnp.float32)
+    kept, res = topk_sparsify(g, 0.1)
+    nnz = int((kept != 0).sum())
+    assert nnz <= int(64 * 64 * 0.1) + 64  # ties tolerance
+    np.testing.assert_allclose(np.asarray(kept + res), np.asarray(g), atol=1e-7)
+
+
+def test_int8_roundtrip(rng):
+    g = jnp.asarray(rng.normal(0, 3, (32, 32)), jnp.float32)
+    q, s = int8_quantize(g)
+    back = int8_dequantize(q, s)
+    assert q.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(back), np.asarray(g),
+                               atol=float(jnp.abs(g).max()) / 127 + 1e-6)
+
+
+def test_error_feedback_accumulates(rng):
+    ef = ErrorFeedback(frac=0.05)
+    g = {"w": jnp.asarray(rng.normal(0, 1, (32, 32)), jnp.float32)}
+    out1 = ef({"w": g["w"]})
+    # the residual must carry the dropped mass into the next call
+    total_in = np.asarray(g["w"])
+    kept1 = np.asarray(out1["w"])
+    res = np.asarray(ef.residual["w"])
+    np.testing.assert_allclose(kept1 + res, total_in, atol=1e-6)
+    out2 = ef({"w": jnp.zeros((32, 32))})
+    assert float(jnp.abs(out2["w"]).sum()) > 0, "residual re-emitted"
+
+
+def test_compressed_training_still_learns(tmp_path):
+    cfg = get_arch("mamba2-130m").reduced()
+    model = build_model(cfg)
+    opt = AdamW(lr=3e-3, warmup_steps=5, total_steps=40)
+    tc = TrainerConfig(total_steps=25, checkpoint_every=100)
+    tr = Trainer(model, opt, make_host_mesh(), _data_cfg(cfg, batch=8, seq=64),
+                 StepConfig(compression="int8"), tc, tmp_path)
+    out = tr.run(resume=False)
+    assert np.mean(out["losses"][-5:]) < np.mean(out["losses"][:5])

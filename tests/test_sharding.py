@@ -1,0 +1,117 @@
+"""Sharding rules: param specs, divisibility fitting, profiles, and
+input/cache assignment for the dry-run cells."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import cache_shardings, input_shardings
+from repro.models.api import build_model
+from repro.models.config import DECODE_32K, LONG_500K, TRAIN_4K
+from repro.parallel.sharding import (fit_spec, get_profile, param_spec_for,
+                                     param_shardings, set_profile, use_mesh)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh()
+
+
+def test_param_rules_dense():
+    with use_mesh(make_host_mesh()):
+        assert param_spec_for("blocks/attn/wq", 3) == P(None, ("data",), "model")
+        assert param_spec_for("blocks/mlp/w_down", 3) == P(None, "model", ("data",))
+        assert param_spec_for("embed", 2) == P("model", ("data",))
+        assert param_spec_for("blocks/norm1", 2) == P(None, None)
+        assert param_spec_for("blocks/attn/q_norm", 2) == P(None, None)
+
+
+def test_param_rules_moe_expert_parallel():
+    with use_mesh(make_host_mesh()):
+        # (L, E, d, ff): experts over model (EP)
+        assert param_spec_for("blocks/moe/w_gate", 4) == P(None, "model", ("data",), None)
+        assert param_spec_for("blocks/moe/router", 3) == P(None, None, None)
+
+
+def test_profiles_change_param_dp(mesh):
+    with use_mesh(mesh):
+        try:
+            set_profile("tp")
+            assert param_spec_for("blocks/mlp/w_gate", 3) == P(None, None, "model")
+            set_profile("fsdp_pod")
+            assert param_spec_for("blocks/mlp/w_gate", 3) == P(None, "data", "model")
+        finally:
+            set_profile("fsdp")
+        assert get_profile() == "fsdp"
+
+
+def test_fit_spec_drops_nondividing_axes(mesh):
+    # mamba2's 3352-wide projection is not divisible by the model axis
+    spec = fit_spec(mesh, (24, 768, 3352), P(None, "data", "model"))
+    model_size = mesh.shape["model"]
+    if 3352 % model_size:
+        assert spec == P(None, "data" if 768 % mesh.shape["data"] == 0 else None, None)
+    # divisible dims keep their axes
+    spec2 = fit_spec(mesh, (16, 128), P("data", "model"))
+    exp0 = "data" if 16 % mesh.shape["data"] == 0 else None
+    exp1 = "model" if 128 % model_size == 0 else None
+    assert spec2 == P(exp0, exp1)
+
+
+def test_param_shardings_cover_all_leaves(mesh):
+    cfg = get_arch("mixtral-8x7b").reduced()
+    model = build_model(cfg)
+    with use_mesh(mesh):
+        shapes = model.param_shapes()
+        shard = param_shardings(mesh, shapes)
+    n_leaves = len(jax.tree_util.tree_leaves(shapes))
+    assert len(jax.tree_util.tree_leaves(shard)) == n_leaves
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "mamba2-130m", "recurrentgemma-9b",
+                                  "seamless-m4t-large-v2"])
+def test_cache_shardings_assign_every_leaf(arch, mesh):
+    cfg = get_arch(arch)
+    model = build_model(cfg)
+    with use_mesh(mesh):
+        specs = model.input_specs(DECODE_32K)
+        sh = input_shardings(mesh, cfg, DECODE_32K, specs)
+    for leaf_spec, leaf_shape in zip(jax.tree_util.tree_leaves(sh["cache"]),
+                                     jax.tree_util.tree_leaves(specs["cache"])):
+        # every assigned axis must divide its dim (jit requirement)
+        for d, axes in enumerate(tuple(leaf_spec.spec)):
+            if axes is None:
+                continue
+            ax = axes if isinstance(axes, tuple) else (axes,)
+            size = int(np.prod([mesh.shape[a] for a in ax]))
+            assert leaf_shape.shape[d] % size == 0
+
+
+def test_long_context_cache_context_parallel(mesh):
+    """long_500k (batch 1): the KV sequence axis absorbs all mesh axes."""
+    cfg = get_arch("mixtral-8x7b")
+    model = build_model(cfg)
+    with use_mesh(mesh):
+        specs = model.input_specs(LONG_500K)
+        sh = cache_shardings(mesh, cfg, LONG_500K, specs["cache"])
+    k_spec = jax.tree_util.tree_leaves(sh)[0].spec
+    # (L, B, S, KV, hd): seq sharded; batch unsharded whenever any mesh axis
+    # is non-trivial (on a 1-device host mesh everything trivially divides)
+    assert k_spec[2] is not None
+    if any(s > 1 for s in mesh.shape.values()):
+        assert k_spec[1] is None
+
+
+def test_train_inputs_batch_sharded(mesh):
+    cfg = get_arch("llama3-8b")
+    model = build_model(cfg)
+    with use_mesh(mesh):
+        specs = model.input_specs(TRAIN_4K)
+        sh = input_shardings(mesh, cfg, TRAIN_4K, specs)
+    tok_spec = sh["tokens"].spec
+    assert tok_spec[0] is not None, "global batch must shard over dp"
