@@ -13,6 +13,11 @@ RESULTS.mkdir(parents=True, exist_ok=True)
 # smoke: minutes on 1 CPU core. paper: the full fleet study (background run).
 SCALE = os.environ.get("REPRO_BENCH_SCALE", "smoke")
 
+# bump to invalidate every cached result when generation changes semantically
+# (v2: process-stable fleet seeding — pre-v2 caches came from salted-hash
+# fleets and must not be mixed with fresh runs)
+CACHE_VERSION = 2
+
 FLEET_PARAMS = {
     "smoke": dict(n_fabrics=6, days=10.0, interval_minutes=60.0,
                   routing_interval_hours=6.0, topology_interval_days=2.0,
@@ -24,7 +29,7 @@ FLEET_PARAMS = {
 
 
 def cached(name: str, fn, force: bool = False):
-    path = RESULTS / f"{name}__{SCALE}.json"
+    path = RESULTS / f"{name}__{SCALE}__v{CACHE_VERSION}.json"
     if path.exists() and not force:
         return json.loads(path.read_text())
     t0 = time.time()

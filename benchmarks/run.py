@@ -38,6 +38,15 @@ def main() -> None:
     emit("fig21_stretch", solver_us,
          f"max_gemini_stretch={agg['max_gemini_stretch']:.3f}")
 
+    # ---- burst-level loss: §5 hedging-vs-loss claim --------------------------
+    from benchmarks import bench_loss
+
+    lo = bench_loss.run()["aggregate"]
+    emit("sec5_burst_loss_hedging", 0.0,
+         f"highvol_hedge_strictly_better={lo['highvol_hedge_strictly_better']};"
+         f"highvol_mean_p999_loss_reduction={lo['highvol_mean_reduction']:.2f};"
+         f"uniform_reduction={lo['hedge_p999_loss_reduction_uniform']:.2f}")
+
     # ---- prediction quality: Figs 22/23/24 -----------------------------------
     from benchmarks import bench_prediction
 

@@ -1,0 +1,27 @@
+"""Burst-level packet-loss subsystem (paper §3, §5).
+
+Gemini's headline claim is that hedging trades a small path-length increase
+for large reductions in *packet loss* under unpredicted bursts.  The 5-minute
+TM intervals the simulator consumes average those bursts away, so MLU alone
+cannot reproduce the loss results.  This package closes the gap in two steps:
+
+* :mod:`repro.burst.expander` — refine each TM interval into short-timescale
+  demand sub-samples with fleet-calibrated Pareto bursts on top of the
+  interval mean (deterministic per seed);
+* :mod:`repro.burst.queue` — a per-link finite-buffer fluid-queue model that
+  turns sub-interval link loads into dropped bytes and per-interval loss
+  fractions, with numpy / jax / pallas backends
+  (:mod:`repro.kernels.queueloss` fuses the routing matmul with the
+  sequential queue scan).
+
+See README.md ("Burst-level packet loss") for the timescale assumptions and
+the mapping to the paper's §3/§5 figures.
+"""
+
+from repro.burst.expander import BurstParams, expand, from_fleet_spec
+from repro.burst.queue import LossConfig, interval_loss, link_buffer_gb
+
+__all__ = [
+    "BurstParams", "expand", "from_fleet_spec",
+    "LossConfig", "interval_loss", "link_buffer_gb",
+]

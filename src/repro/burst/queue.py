@@ -1,0 +1,131 @@
+"""Finite-buffer fluid-queue loss model over sub-interval link loads.
+
+Each directed link ``e`` is a fluid queue drained at capacity ``cap[e]``
+(Gb/s) with a finite buffer ``buf[e]`` (Gb) sized in time units of the line
+rate (``buffer_ms``, the switch-buffer depth).  Over sub-steps of duration
+``dt`` seconds with offered load ``load[k, e]``:
+
+    x[k]    = q[k] + (load[k, e] - cap[e]) · dt      # fluid level
+    drop[k] = max(0, x[k] - buf[e])                  # overflowed volume (Gb)
+    q[k+1]  = clip(x[k], 0, buf[e])
+
+The per-interval **loss fraction** is dropped volume over *offered demand*
+volume (the expanded sub-interval demand, bursts included), aggregated over
+links and the interval's ``n_sub`` sub-steps and clipped to 1 — loads are not
+flow-conserving across hops, so in deep saturation the same traffic can be
+dropped at both hops of a transit path and double-count.  Normalizing by
+demand rather than by routed link volume keeps the metric comparable across
+strategies: a high-stretch (hedged) routing must not look better merely
+because each byte is counted at more queues.  When every sub-step load is
+below capacity (e.g. MLU < 1 with zero-size bursts) queues never build and
+loss is exactly zero.
+
+Queue state carries across the intervals *within one call* (one controller
+routing block) and starts empty at block boundaries — at these sub-step
+timescales buffers fill or drain within a single step whenever loads cross
+capacity, so the boundary reset is observable only under sustained overload
+spanning a reconfiguration, where real queues would also be rebuilt.
+
+Timescale assumptions: ``dt`` (seconds to tens of seconds) is far above the
+packet RTT, so TCP backoff / drop-tail dynamics are abstracted into fluid
+overflow — the same first-order model the paper's loss discussion (§3, §5)
+relies on; buffers (``buffer_ms`` at line rate, tens of ms) only matter for
+excursions shorter than ``buf/(load-cap)``, which makes the model an upper
+bound on bufferable bursts and exact in the bufferless limit.
+
+Backends: ``numpy`` (float64 loop), ``jax`` (jnp scan), ``pallas`` (fused
+matmul + queue-scan kernel, :mod:`repro.kernels.queueloss`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.burst.expander import BurstParams, expand
+
+__all__ = ["LossConfig", "link_buffer_gb", "interval_loss", "queue_loss_numpy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LossConfig:
+    """Configuration of the burst-loss pipeline (expander + fluid queue).
+
+    Attributes:
+      burst: sub-interval burst model (:class:`BurstParams`).
+      n_sub: sub-samples per TM interval (S).
+      buffer_ms: per-link buffer depth in milliseconds at line rate.
+      seed: burst realization seed (same seed ⇒ same bursts ⇒ paired
+        comparisons across strategies).
+    """
+
+    burst: BurstParams = BurstParams.zero()
+    n_sub: int = 12
+    buffer_ms: float = 25.0
+    seed: int = 0
+
+
+def link_buffer_gb(capacities: np.ndarray, buffer_ms: float) -> np.ndarray:
+    """Buffer depth per link in Gb: ``cap (Gb/s) × buffer_ms``."""
+    return np.asarray(capacities, np.float64) * (buffer_ms * 1e-3)
+
+
+def queue_loss_numpy(demand: np.ndarray, weights: np.ndarray, cap: np.ndarray,
+                     buf: np.ndarray, dt: float):
+    """Float64, jax-free queue-loss oracle (the precision reference).
+
+    Same contract as :func:`repro.kernels.queueloss.ops.queue_loss`:
+    returns per-sub-step ``(drop, tot)`` — dropped Gb and offered load Gb/s,
+    each summed over links, shape ``(TS,)`` float64.
+    """
+    demand = np.asarray(demand, np.float64)
+    load = demand @ np.asarray(weights, np.float64)
+    cap = np.asarray(cap, np.float64)
+    buf = np.asarray(buf, np.float64)
+    ts = demand.shape[0]
+    q = np.zeros_like(cap)
+    drop = np.empty(ts, np.float64)
+    tot = np.empty(ts, np.float64)
+    for k in range(ts):
+        x = q + (load[k] - cap) * dt
+        drop[k] = np.maximum(x - buf, 0.0).sum()
+        q = np.clip(x, 0.0, buf)
+        tot[k] = load[k].sum()
+    return drop, tot
+
+
+def interval_loss(
+    demand: np.ndarray,
+    weights: np.ndarray,
+    capacities: np.ndarray,
+    interval_seconds: float,
+    cfg: LossConfig,
+    backend: str = "numpy",
+) -> np.ndarray:
+    """Per-interval loss fraction for a ``(T, C)`` demand block.
+
+    Expands the block into sub-interval samples (:mod:`repro.burst.expander`),
+    routes them with ``weights (C, E_d)``, runs the fluid queue per link, and
+    aggregates dropped over offered *demand* volume per original interval.
+    Returns a ``(T,)`` float64 array in [0, 1].  ``backend="numpy"`` stays
+    jax-free (:func:`queue_loss_numpy`).
+    """
+    demand = np.asarray(demand, dtype=np.float64)
+    t = demand.shape[0]
+    if t == 0:
+        return np.zeros((0,))
+    cap = np.asarray(capacities, dtype=np.float64)
+    sub = expand(demand, cfg.n_sub, cfg.burst, cfg.seed)
+    dt = interval_seconds / cfg.n_sub
+    buf = link_buffer_gb(cap, cfg.buffer_ms)
+    if backend == "numpy":
+        drop, _ = queue_loss_numpy(sub, weights, cap, buf, dt)
+    else:
+        from repro.kernels.queueloss import ops as qlops
+
+        drop, _ = qlops.queue_loss(sub, weights, cap, buf, dt, backend=backend)
+    drop_i = drop.reshape(t, cfg.n_sub).sum(axis=1)  # Gb dropped
+    offered_i = sub.sum(axis=1).reshape(t, cfg.n_sub).sum(axis=1) * dt  # Gb demanded
+    return np.where(offered_i > 1e-12,
+                    np.minimum(drop_i / np.maximum(offered_i, 1e-12), 1.0), 0.0)

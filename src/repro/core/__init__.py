@@ -1,7 +1,8 @@
 """Gemini core: joint topology + traffic engineering for reconfigurable
 inter-pod (DCNI) networks — the paper's contribution, plus its physical
 realization (rounding, patch panels), traffic modeling, online controller,
-predictor, simulator, and demand-oblivious baselines."""
+predictor, simulator, burst-level loss model, and demand-oblivious
+baselines."""
 
 from repro.core.graph import Fabric, uniform_topology
 from repro.core.paths import PathSet, build_paths, routing_weight_matrix
@@ -11,6 +12,7 @@ from repro.core.solver import STRATEGIES, GeminiSolution, SolverConfig, Strategy
 from repro.core.simulator import IntervalMetrics, route_metrics, summarize
 from repro.core.controller import ControllerConfig, ControllerResult, run_controller
 from repro.core.predictor import Prediction, pick_best, predict
+from repro.burst import BurstParams, LossConfig
 
 __all__ = [
     "Fabric", "uniform_topology", "PathSet", "build_paths",
@@ -18,4 +20,5 @@ __all__ = [
     "GeminiSolution", "SolverConfig", "Strategy", "solve", "IntervalMetrics",
     "route_metrics", "summarize", "ControllerConfig", "ControllerResult",
     "run_controller", "Prediction", "pick_best", "predict",
+    "BurstParams", "LossConfig",
 ]

@@ -8,6 +8,11 @@ warm-up (used to produce the initial configuration), and metrics are reported
 from the end of warm-up onward.  Topologies are *physically realized*
 (fractional trunks rounded via paper Algorithm 1, §A) before being scored, so
 rounding effects are part of every reported number.
+
+With ``ControllerConfig.loss`` set (a :class:`repro.burst.LossConfig`), every
+scored interval additionally carries the burst-level packet-loss fraction
+from the sub-interval fluid-queue model (:mod:`repro.burst`) — the paper's
+headline §3/§5 metric.
 """
 
 from __future__ import annotations
@@ -16,6 +21,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.burst import LossConfig
 from repro.core import clustering
 from repro.core.graph import Fabric, uniform_topology
 from repro.core.paths import build_paths, routing_weight_matrix
@@ -36,6 +42,9 @@ class ControllerConfig:
     realize_topology: bool = True
     overload_threshold: float = 0.8
     backend: str = "numpy"  # metrics backend: numpy | jax | pallas
+    # burst-level loss tracking; None = off.  The loss seed is shared across
+    # strategies, so comparisons are paired under identical burst realizations.
+    loss: LossConfig | None = None
 
 
 @dataclasses.dataclass
@@ -110,8 +119,16 @@ def run_controller(
 
         w = routing_weight_matrix(paths, sol.f)
         block = trace.demand[start : start + route_step]
+        # vary the burst seed per block (identical bursts in every block would
+        # collapse the p99.9 onto one replayed realization) while keeping it a
+        # pure function of (cc.loss.seed, start) — strategies walk the same
+        # starts, so comparisons stay paired under identical bursts
+        loss_cfg = (dataclasses.replace(cc.loss, seed=cc.loss.seed + start)
+                    if cc.loss is not None else None)
         metrics = metrics.concat(
-            route_metrics(block, w, cap, cc.overload_threshold, backend=cc.backend))
+            route_metrics(block, w, cap, cc.overload_threshold, backend=cc.backend,
+                          loss_cfg=loss_cfg,
+                          interval_seconds=trace.interval_minutes * 60.0))
 
     return ControllerResult(
         strategy=strategy,

@@ -20,13 +20,15 @@ utilization, keeping all fabrics in a realistic operating regime.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
 from repro.core.graph import Fabric, uniform_topology
 from repro.core.traffic import Trace
 
-__all__ = ["FabricSpec", "FLEET_SPECS", "make_fabric", "make_trace", "make_fleet"]
+__all__ = ["FabricSpec", "FLEET_SPECS", "make_fabric", "make_trace", "make_fleet",
+           "sub_burst_params"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,8 +87,29 @@ def _specs() -> tuple:
 FLEET_SPECS = _specs()
 
 
+def sub_burst_params(spec: FabricSpec, **kwargs):
+    """Sub-interval burst calibration for ``spec`` (see :mod:`repro.burst`).
+
+    Reuses the fabric's interval-level ``burst_rate/shape/scale`` so the
+    fleet's volatility ordering carries over to the burst-loss timescale.
+    Keyword arguments (``rate_boost``, ``attenuation``, ``clip``) forward to
+    :func:`repro.burst.expander.from_fleet_spec`, which owns the defaults.
+    Returns a :class:`repro.burst.BurstParams`.
+    """
+    from repro.burst.expander import from_fleet_spec
+
+    return from_fleet_spec(spec, **kwargs)
+
+
+def _stable_seed(name: str, seed: int, kind: str) -> int:
+    """Process-independent RNG seed.  Python's ``hash()`` of strings is
+    salted per process (PYTHONHASHSEED), which silently broke the
+    deterministic-per-(fabric, seed) contract across runs."""
+    return zlib.crc32(f"{name}/{seed}/{kind}".encode())
+
+
 def make_fabric(spec: FabricSpec, seed: int = 0) -> Fabric:
-    rng = np.random.default_rng(hash((spec.name, seed, "fabric")) % (2**32))
+    rng = np.random.default_rng(_stable_seed(spec.name, seed, "fabric"))
     radix = rng.choice(spec.radix_choices, size=spec.n_pods)
     speed = rng.choice(spec.speed_choices, size=spec.n_pods)
     # keep radixes even (patch-panel theorem applies to even degrees)
@@ -102,7 +125,7 @@ def make_trace(
     seed: int = 0,
 ) -> Trace:
     """Generate a (T, C) trace for one fabric."""
-    rng = np.random.default_rng(hash((spec.name, seed, "trace")) % (2**32))
+    rng = np.random.default_rng(_stable_seed(spec.name, seed, "trace"))
     v = fabric.n_pods
     c = v * (v - 1)
     ipd = int(round(24 * 60 / interval_minutes))

@@ -4,13 +4,17 @@ window and applying the operator objective:
 
     prefer the strategy whose p99.9 MLU is within ``cushion`` (5%) of the
     best p99.9 MLU; break ties by p99.9 ALU.
+
+With burst-level loss tracking enabled (``ControllerConfig.loss``, see
+:mod:`repro.burst`), ``objective="loss"`` applies the paper's loss-aware
+variant instead: prefer the strategy whose p99.9 *loss fraction* is within
+the cushion of the best, breaking ties by p99.9 MLU then ALU — this is the
+objective under which hedging pays off on volatile fabrics (§5).
 """
 
 from __future__ import annotations
 
 import dataclasses
-
-import numpy as np
 
 from repro.core.controller import ControllerConfig, ControllerResult, run_controller
 from repro.core.graph import Fabric
@@ -28,9 +32,32 @@ class Prediction:
     cushion: float
 
 
-def pick_best(per_strategy: dict, cushion: float = 0.05) -> str:
-    """Operator objective (paper §4.6): among strategies with p99.9 MLU within
-    ``cushion`` of the minimum, pick the lowest p99.9 ALU."""
+def pick_best(per_strategy: dict, cushion: float = 0.05,
+              objective: str = "mlu") -> str:
+    """Operator objective (paper §4.6).
+
+    ``objective="mlu"``: among strategies with p99.9 MLU within ``cushion``
+    of the minimum, pick the lowest p99.9 ALU.
+
+    ``objective="loss"``: among strategies with p99.9 loss fraction within
+    ``cushion`` of the minimum (relative, with a 1e-6 absolute floor so an
+    all-zero-loss tie falls through cleanly), pick the lowest p99.9 MLU,
+    breaking remaining ties by p99.9 ALU.  Requires summaries produced with
+    loss tracking on (``p999_loss`` present).
+    """
+    if objective == "loss":
+        if any("p999_loss" not in v for v in per_strategy.values()):
+            raise ValueError(
+                "objective='loss' needs summaries produced with loss tracking "
+                "on (set ControllerConfig.loss to a repro.burst.LossConfig)")
+        losses = {k: v["p999_loss"] for k, v in per_strategy.items()}
+        best = min(losses.values())
+        slack = max(best * cushion, 1e-6)
+        eligible = {k for k, v in losses.items() if v <= best + slack}
+        return min(eligible, key=lambda k: (per_strategy[k]["p999_mlu"],
+                                            per_strategy[k]["p999_alu"], k))
+    if objective != "mlu":
+        raise ValueError(f"unknown objective {objective!r}")
     mlus = {k: v["p999_mlu"] for k, v in per_strategy.items()}
     best = min(mlus.values())
     eligible = {k for k, v in mlus.items() if v <= best * (1 + cushion) + 1e-12}
@@ -44,6 +71,7 @@ def predict(
     sc: SolverConfig | None = None,
     cushion: float = 0.05,
     strategies: tuple = STRATEGIES,
+    objective: str = "mlu",
 ) -> Prediction:
     """Simulate each strategy over the training window and pick the winner."""
     per: dict = {}
@@ -52,6 +80,6 @@ def predict(
         res: ControllerResult = run_controller(fabric, training, strat, cc, sc)
         per[strat.name] = res.summary
         by_name[strat.name] = strat
-    choice = pick_best(per, cushion)
+    choice = pick_best(per, cushion, objective=objective)
     return Prediction(fabric=fabric.name, strategy=by_name[choice],
                       per_strategy=per, cushion=cushion)

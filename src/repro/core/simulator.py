@@ -15,6 +15,12 @@ Metrics per interval (paper §3 / §5.2):
 Summaries report the p99.9 over intervals (paper footnote 6).  Backends:
 ``numpy`` (default), ``jax`` (jnp matmul), ``pallas`` (fused
 ``kernels/linkload`` kernel — loads never materialize in HBM).
+
+When a :class:`repro.burst.LossConfig` is supplied, each interval also gets a
+burst-level **loss fraction** from the sub-interval fluid-queue model
+(:mod:`repro.burst`) — the paper's headline §3/§5 metric; the loss pipeline
+reuses the metrics backend (``pallas`` selects the fused
+``kernels/queueloss`` matmul+scan kernel).
 """
 
 from __future__ import annotations
@@ -26,12 +32,25 @@ import numpy as np
 __all__ = ["IntervalMetrics", "route_metrics", "p999", "summarize"]
 
 
+def _concat_loss(a, a_size: int, b, b_size: int):
+    """Concatenate optional loss arrays; an empty side adopts the other's
+    tracking state, and mixing tracked with untracked drops loss entirely."""
+    if a is None and b is None:
+        return None
+    if a is None:
+        return b if a_size == 0 else None
+    if b is None:
+        return a if b_size == 0 else None
+    return np.concatenate([a, b])
+
+
 @dataclasses.dataclass
 class IntervalMetrics:
     mlu: np.ndarray  # (T,)
     alu: np.ndarray  # (T,)
     olr: np.ndarray  # (T,)
     stretch: np.ndarray  # (T,)
+    loss: np.ndarray | None = None  # (T,) burst-level loss fraction, if tracked
 
     def concat(self, other: "IntervalMetrics") -> "IntervalMetrics":
         return IntervalMetrics(
@@ -39,6 +58,7 @@ class IntervalMetrics:
             alu=np.concatenate([self.alu, other.alu]),
             olr=np.concatenate([self.olr, other.olr]),
             stretch=np.concatenate([self.stretch, other.stretch]),
+            loss=_concat_loss(self.loss, self.mlu.size, other.loss, other.mlu.size),
         )
 
     @staticmethod
@@ -52,7 +72,7 @@ def p999(x: np.ndarray) -> float:
 
 
 def summarize(m: IntervalMetrics) -> dict:
-    return {
+    out = {
         "p999_mlu": p999(m.mlu),
         "p999_alu": p999(m.alu),
         "p999_olr": p999(m.olr),
@@ -61,6 +81,10 @@ def summarize(m: IntervalMetrics) -> dict:
         "mean_alu": float(m.alu.mean()) if m.alu.size else float("nan"),
         "mean_stretch": float(m.stretch.mean()) if m.stretch.size else float("nan"),
     }
+    if m.loss is not None:
+        out["p999_loss"] = p999(m.loss)
+        out["mean_loss"] = float(m.loss.mean()) if m.loss.size else float("nan")
+    return out
 
 
 def route_metrics(
@@ -69,8 +93,15 @@ def route_metrics(
     capacities: np.ndarray,
     overload_threshold: float = 0.8,
     backend: str = "numpy",
+    loss_cfg=None,
+    interval_seconds: float | None = None,
 ) -> IntervalMetrics:
-    """Compute per-interval MLU/ALU/OLR/stretch for a (T, C) demand block."""
+    """Compute per-interval MLU/ALU/OLR/stretch for a (T, C) demand block.
+
+    With ``loss_cfg`` (a :class:`repro.burst.LossConfig`) and
+    ``interval_seconds``, also attaches the per-interval burst-level loss
+    fraction computed by :func:`repro.burst.interval_loss` on ``backend``.
+    """
     demand = np.asarray(demand, dtype=np.float64)
     cap = np.asarray(capacities, dtype=np.float64)
     live = cap > 1e-9
@@ -98,4 +129,12 @@ def route_metrics(
         load_tot = load.sum(axis=1)
     tot_dem = demand.sum(axis=1)
     stretch = np.where(tot_dem > 1e-12, load_tot / np.maximum(tot_dem, 1e-12), 1.0)
-    return IntervalMetrics(mlu=mlu, alu=alu, olr=olr, stretch=stretch)
+    loss = None
+    if loss_cfg is not None:
+        if interval_seconds is None:
+            raise ValueError("loss tracking requires interval_seconds")
+        from repro.burst import interval_loss
+
+        loss = interval_loss(demand, weights, cap, interval_seconds, loss_cfg,
+                             backend=backend)
+    return IntervalMetrics(mlu=mlu, alu=alu, olr=olr, stretch=stretch, loss=loss)

@@ -1,0 +1,1 @@
+"""Fused matmul + fluid-queue loss scan kernel (see :mod:`repro.burst`)."""

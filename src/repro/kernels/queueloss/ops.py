@@ -1,0 +1,70 @@
+"""Jit'd public wrapper for the fused queue-loss kernel.
+
+Handles padding to tile multiples and backend selection: the Pallas kernel
+(interpret-mode on CPU), the pure-jnp scan reference, or the float64 numpy
+oracle (:func:`repro.burst.queue.queue_loss_numpy` — kept jax-free there;
+the f32 casts below apply to the kernel backends only).  All backends
+implement the same finite-buffer fluid-queue recurrence; padded links get
+``cap = buf = 0`` and carry zero load, so they never drop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.queueloss.queueloss import queueloss_pallas
+from repro.kernels.queueloss.ref import queueloss_ref
+
+__all__ = ["queue_loss"]
+
+
+def _pad_to(x: np.ndarray, axis: int, mult: int) -> np.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, pad)
+    return np.pad(x, width)
+
+
+def queue_loss(demand, weights, capacities, buffers, dt: float,
+               backend: str = "pallas",
+               bt: int = 128, be: int = 128, bc: int = 128):
+    """Per-sub-step (drop_sum, load_sum) for a (TS, C) sub-interval demand
+    block routed by ``weights (C, E)`` over links with ``capacities (E,)``
+    (Gb/s) and finite buffers ``buffers (E,)`` (Gb); ``dt`` is the sub-step
+    duration in seconds.
+
+    Returns ``(drop, tot)``: dropped volume (Gb) and offered load (Gb/s) per
+    sub-step, each summed over links, shape ``(TS,)`` float64.
+    """
+    if backend not in ("pallas", "jnp", "jax"):  # numpy: float64 end to end
+        from repro.burst.queue import queue_loss_numpy
+
+        return queue_loss_numpy(demand, weights, capacities, buffers, dt)
+    demand = np.asarray(demand, np.float32)
+    weights = np.asarray(weights, np.float32)
+    cap = np.asarray(capacities, np.float32)
+    buf = np.asarray(buffers, np.float32)
+    ts_orig = demand.shape[0]
+    if backend == "pallas":
+        d = _pad_to(demand, 0, bt)
+        d = _pad_to(d, 1, bc)
+        w = _pad_to(weights, 0, bc)
+        w = _pad_to(w, 1, be)
+        cp = _pad_to(cap[None, :], 1, be)
+        bf = _pad_to(buf[None, :], 1, be)
+        interpret = jax.default_backend() == "cpu"
+        drop, tot = queueloss_pallas(
+            jnp.asarray(d), jnp.asarray(w), jnp.asarray(cp), jnp.asarray(bf),
+            jnp.full((1, 1), dt, jnp.float32),
+            bt=bt, be=be, bc=bc, interpret=interpret)
+        drop, tot = (np.asarray(x, np.float64)[:ts_orig] for x in (drop, tot))
+    else:  # jnp / jax
+        drop, tot = (np.asarray(x, np.float64) for x in queueloss_ref(
+            jnp.asarray(demand), jnp.asarray(weights),
+            jnp.asarray(cap), jnp.asarray(buf), jnp.float32(dt)))
+    return drop, tot

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the fused queue-loss kernel.
+
+The recurrence per directed link ``e`` (fluid queue with finite buffer, see
+:mod:`repro.burst.queue` for the model):
+
+    x[k]     = q[k] + (load[k, e] - cap[e]) * dt        # pre-clip level (Gb)
+    drop[k]  = max(0, x[k] - buf[e])                    # overflow (Gb)
+    q[k+1]   = clip(x[k], 0, buf[e])
+
+Outputs are aggregated over links per sub-step, matching the Pallas kernel's
+output contract: ``(drop_sum, load_sum)``, each ``(TS,)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def queueloss_ref(demand, w, cap, buf, dt):
+    """Unfused reference: materializes the (TS, E) load matrix.
+
+    Args:
+      demand: (TS, C) f32 sub-interval demand (Gb/s); w: (C, E) f32 routing
+      weights; cap: (E,) f32 link capacities (Gb/s); buf: (E,) f32 buffer
+      depths (Gb); dt: scalar sub-step duration (s).
+    Returns: (drop_sum, load_sum), each (TS,) f32 — dropped Gb per sub-step
+      and total offered load (Gb/s) per sub-step, both summed over links.
+    """
+    load = demand @ w  # (TS, E)
+
+    def step(q, load_row):
+        x = q + (load_row - cap) * dt
+        drop = jnp.maximum(x - buf, 0.0)
+        q_new = jnp.clip(x, 0.0, buf)
+        return q_new, (drop.sum(), load_row.sum())
+
+    _, (drops, tots) = jax.lax.scan(step, jnp.zeros_like(cap), load)
+    return drops, tots

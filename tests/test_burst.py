@@ -1,0 +1,159 @@
+"""Burst subsystem: expander determinism, fluid-queue loss model invariants."""
+
+import numpy as np
+import pytest
+
+from repro.burst import BurstParams, LossConfig, expand, from_fleet_spec, interval_loss
+from repro.burst.queue import link_buffer_gb
+from repro.core.baselines import vlb_weights
+from repro.core.fleet import FLEET_SPECS, sub_burst_params
+from repro.core.graph import uniform_topology
+from repro.core.simulator import route_metrics
+
+
+# ---------------------------------------------------------------- expander
+
+def test_expand_zero_bursts_is_exact_repeat(rng):
+    demand = rng.gamma(2.0, 10.0, (20, 30))
+    sub = expand(demand, 6, BurstParams.zero())
+    assert sub.shape == (120, 30)
+    np.testing.assert_array_equal(sub, np.repeat(demand, 6, axis=0))
+
+
+def test_expand_deterministic_per_seed(rng):
+    demand = rng.gamma(2.0, 10.0, (15, 12))
+    params = BurstParams(rate=0.05, shape=1.8, scale=2.0)
+    a = expand(demand, 8, params, seed=7)
+    b = expand(demand, 8, params, seed=7)
+    c = expand(demand, 8, params, seed=8)
+    np.testing.assert_array_equal(a, b)
+    assert (a != c).any(), "different seeds must give different bursts"
+
+
+def test_expand_bursts_additive_and_clipped(rng):
+    demand = rng.gamma(2.0, 10.0, (30, 20))
+    params = BurstParams(rate=0.3, shape=1.2, scale=4.0, clip=5.0)
+    sub = expand(demand, 4, params, seed=1)
+    base = np.repeat(demand, 4, axis=0)
+    assert (sub >= base - 1e-12).all(), "bursts sit on top of the interval mean"
+    assert (sub <= base * (1.0 + 5.0) + 1e-9).all(), "clip bounds the multiplier"
+    assert (sub > base).any()
+
+
+def test_expand_validates():
+    with pytest.raises(ValueError):
+        expand(np.zeros((3, 4)), 0, BurstParams.zero())
+    with pytest.raises(ValueError):
+        BurstParams(rate=1.5, shape=2.0, scale=1.0)
+    with pytest.raises(ValueError):
+        BurstParams(rate=0.1, shape=-1.0, scale=1.0)
+
+
+def test_fleet_calibration_preserves_volatility_order():
+    f1 = sub_burst_params(FLEET_SPECS[0])  # F1: most predictable
+    f3 = sub_burst_params(FLEET_SPECS[2])  # F3: least bounded
+    assert f3.rate > f1.rate
+    assert f3.shape < f1.shape  # heavier tail
+    assert f3.scale > f1.scale
+    assert from_fleet_spec(FLEET_SPECS[2]) == f3
+
+
+# ------------------------------------------------------------- loss model
+
+@pytest.fixture(scope="module")
+def routed_fabric(small_fabric):
+    cap = small_fabric.capacities(uniform_topology(small_fabric))
+    w = vlb_weights(small_fabric.n_pods)
+    return small_fabric, w, cap
+
+
+def test_loss_zero_when_mlu_below_one_without_bursts(routed_fabric, small_trace):
+    _, w, cap = routed_fabric
+    m = route_metrics(small_trace.demand, w, cap)
+    loss = interval_loss(small_trace.demand, w, cap, 3600.0,
+                         LossConfig(burst=BurstParams.zero()))
+    assert loss.shape == (small_trace.n_intervals,)
+    assert (loss[m.mlu < 1.0] == 0.0).all()
+
+
+def test_loss_matches_fluid_overflow_when_overloaded(rng):
+    # one link, constant overload, bufferless: loss = (load-cap)/load exactly
+    demand = np.full((5, 2), 10.0)  # 2-pod fabric: C = E_d = 2, direct routing
+    w = np.eye(2)
+    cap = np.array([8.0, 40.0])
+    loss = interval_loss(demand, w, cap, 60.0,
+                         LossConfig(burst=BurstParams.zero(), buffer_ms=0.0, n_sub=3))
+    expected = (10.0 - 8.0) / 20.0  # dropped on link 0 over total offered
+    np.testing.assert_allclose(loss, expected, rtol=1e-12)
+
+
+def test_buffer_absorbs_short_excursion():
+    # load exceeds capacity for one sub-step by 1 Gb; buffer of 2 Gb absorbs it
+    demand = np.array([[5.0, 0.0]])
+    w = np.eye(2)
+    cap = np.array([4.0, 4.0])
+    cfg_small = LossConfig(burst=BurstParams.zero(), n_sub=1, buffer_ms=0.0)
+    cfg_big = LossConfig(burst=BurstParams.zero(), n_sub=1, buffer_ms=500.0)
+    lossy = interval_loss(demand, w, cap, 1.0, cfg_small)
+    buffered = interval_loss(demand, w, cap, 1.0, cfg_big)
+    assert lossy[0] > 0
+    assert buffered[0] == 0.0
+    np.testing.assert_allclose(link_buffer_gb(cap, 500.0), cap * 0.5)
+
+
+def test_loss_bounded_and_monotone_in_bursts(routed_fabric, small_trace):
+    _, w, cap = routed_fabric
+    demand = small_trace.demand[:40]
+    calm = interval_loss(demand, w, cap, 3600.0,
+                         LossConfig(burst=BurstParams(0.02, 1.6, 1.0, clip=8.0)))
+    wild = interval_loss(demand, w, cap, 3600.0,
+                         LossConfig(burst=BurstParams(0.1, 1.6, 4.0, clip=8.0)))
+    assert ((0.0 <= calm) & (calm <= 1.0)).all()
+    assert ((0.0 <= wild) & (wild <= 1.0)).all()
+    assert wild.mean() >= calm.mean()
+
+
+def test_route_metrics_attaches_loss(routed_fabric, small_trace):
+    _, w, cap = routed_fabric
+    cfg = LossConfig(burst=BurstParams(0.05, 1.6, 2.0, clip=8.0))
+    m = route_metrics(small_trace.demand[:30], w, cap, loss_cfg=cfg,
+                      interval_seconds=3600.0)
+    assert m.loss is not None and m.loss.shape == m.mlu.shape
+    with pytest.raises(ValueError):
+        route_metrics(small_trace.demand[:30], w, cap, loss_cfg=cfg)
+
+
+def test_interval_metrics_concat_loss_semantics(routed_fabric, small_trace):
+    from repro.core.simulator import IntervalMetrics, summarize
+
+    _, w, cap = routed_fabric
+    cfg = LossConfig(burst=BurstParams.zero())
+    a = route_metrics(small_trace.demand[:10], w, cap, loss_cfg=cfg,
+                      interval_seconds=3600.0)
+    b = route_metrics(small_trace.demand[10:20], w, cap, loss_cfg=cfg,
+                      interval_seconds=3600.0)
+    both = IntervalMetrics.empty().concat(a).concat(b)
+    assert both.loss is not None and both.loss.size == 20
+    s = summarize(both)
+    assert "p999_loss" in s and "mean_loss" in s
+    # untracked blocks keep summaries loss-free
+    plain = route_metrics(small_trace.demand[:10], w, cap)
+    assert plain.loss is None
+    assert "p999_loss" not in summarize(plain)
+    assert IntervalMetrics.empty().concat(plain).concat(a).loss is None
+
+
+def test_pick_best_loss_objective():
+    from repro.core.predictor import pick_best
+
+    per = {
+        "a": {"p999_mlu": 0.9, "p999_alu": 0.5, "p999_loss": 0.10},
+        "b": {"p999_mlu": 1.1, "p999_alu": 0.2, "p999_loss": 0.02},
+        "c": {"p999_mlu": 0.7, "p999_alu": 0.4, "p999_loss": 0.021},
+    }
+    assert pick_best(per, objective="mlu") == "c"
+    # b has the lowest loss but c is within the cushion with lower MLU
+    assert pick_best(per, cushion=0.05, objective="loss") == "c"
+    assert pick_best(per, cushion=0.0, objective="loss") == "b"
+    with pytest.raises(ValueError):
+        pick_best(per, objective="stretch")
