@@ -1,0 +1,151 @@
+"""Engine bench: plan/batch-execute controller vs the sequential scipy path.
+
+Measures the production hot path of §4.6 — the controller re-solving routing
+on every epoch of a trace — in two configurations:
+
+* **sequential / scipy**: the legacy walk, one HiGHS LP pipeline per epoch
+  (the baseline this repo shipped with);
+* **batched / pdhg**: the plan → batch-execute engine
+  (:mod:`repro.core.engine`): all routing epochs solved in one vmapped,
+  anchor-warm-started PDHG call and scored in one batched pass.
+
+The default scale runs the fleet's large high-entropy fabrics (F22, F12 —
+near-uniform TMs make the per-epoch LPs expensive, which is exactly where
+fleet solver time concentrates) at an hourly routing cadence with the
+paper-default ``k_critical = 12``.  Wall-clock is reported cold (first call,
+jit compile included) and warm (steady state: the deployed controller reuses
+compiled kernels across epochs/fabrics); the headline speedup gate (≥ 5×) is
+on warm aggregate.  Per-fabric p99.9-metric deltas between the two solver
+backends are reported alongside — exact batched-vs-sequential parity (same
+backend) is enforced by ``tests/test_core_engine.py``.
+
+    PYTHONPATH=src python -m benchmarks.bench_engine          # default scale
+    PYTHONPATH=src python -m benchmarks.bench_engine --tiny   # CI smoke
+    PYTHONPATH=src python -m benchmarks.bench_engine --tiny --json BENCH_engine.json
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import SCALE, cached
+from repro.core import ControllerConfig, SolverConfig, Strategy, run_controller
+from repro.core.fleet import FLEET_SPECS, make_fabric, make_trace
+
+# fleet's 11-12-pod fabrics; F22/F12 are the near-uniform-TM (LP-hard) class
+DEFAULT_PARAMS = dict(fabric_indices=(21, 11), days=4.0, interval_minutes=15.0,
+                      routing_interval_hours=1.0, topology_interval_days=2.0,
+                      aggregation_days=2.0, k_critical=12)
+# CI smoke: one small fabric, coarse cadence (~1 min)
+TINY_PARAMS = dict(fabric_indices=(16,), days=6.0, interval_minutes=120.0,
+                   routing_interval_hours=6.0, topology_interval_days=2.0,
+                   aggregation_days=2.0, k_critical=4)
+
+METRICS = ("p999_mlu", "p999_alu", "p999_olr", "p999_stretch")
+
+
+def _rel(a: float, b: float) -> float:
+    return abs(a - b) / max(abs(b), 1e-9)
+
+
+def _run(scale: str) -> dict:
+    p = TINY_PARAMS if scale == "tiny" else DEFAULT_PARAMS
+    base = ControllerConfig(
+        routing_interval_hours=p["routing_interval_hours"],
+        topology_interval_days=p["topology_interval_days"],
+        aggregation_days=p["aggregation_days"], k_critical=p["k_critical"])
+    sc = SolverConfig(stage1_method="scaled")
+    strat = Strategy(nonuniform=False, hedging=True)
+    rows = []
+    for idx in p["fabric_indices"]:
+        spec = FLEET_SPECS[idx]
+        fabric = make_fabric(spec)
+        trace = make_trace(spec, fabric, days=p["days"],
+                           interval_minutes=p["interval_minutes"])
+        cc_seq = dataclasses.replace(base, engine="sequential",
+                                     solver_backend="scipy")
+        cc_bat = dataclasses.replace(base, engine="batched",
+                                     solver_backend="pdhg")
+        t0 = time.time()
+        seq = run_controller(fabric, trace, strat, cc_seq, sc)
+        t_seq = time.time() - t0
+        t0 = time.time()
+        run_controller(fabric, trace, strat, cc_bat, sc)
+        t_cold = time.time() - t0
+        t0 = time.time()
+        bat = run_controller(fabric, trace, strat, cc_bat, sc)
+        t_warm = time.time() - t0
+        rows.append({
+            "fabric": spec.name,
+            "pods": fabric.n_pods,
+            "routing_epochs": bat.n_routing_updates,
+            "seq_scipy_s": round(t_seq, 2),
+            "batched_pdhg_cold_s": round(t_cold, 2),
+            "batched_pdhg_warm_s": round(t_warm, 2),
+            "speedup_warm": round(t_seq / max(t_warm, 1e-9), 2),
+            "seq_solver_s": round(seq.solver_seconds, 2),
+            "batched_solver_s": round(bat.solver_seconds, 2),
+            "p999_rel_delta": {k: round(_rel(bat.summary[k], seq.summary[k]), 4)
+                               for k in METRICS},
+            "seq_summary": {k: seq.summary[k] for k in METRICS},
+            "batched_summary": {k: bat.summary[k] for k in METRICS},
+        })
+    tot_seq = sum(r["seq_scipy_s"] for r in rows)
+    tot_warm = sum(r["batched_pdhg_warm_s"] for r in rows)
+    tot_cold = sum(r["batched_pdhg_cold_s"] for r in rows)
+    agg = {
+        "scale": scale,
+        "n_fabrics": len(rows),
+        "seq_scipy_total_s": round(tot_seq, 2),
+        "batched_pdhg_warm_total_s": round(tot_warm, 2),
+        "batched_pdhg_cold_total_s": round(tot_cold, 2),
+        "speedup_warm": round(tot_seq / max(tot_warm, 1e-9), 2),
+        "speedup_cold": round(tot_seq / max(tot_cold, 1e-9), 2),
+        "solver_seconds_speedup": round(
+            sum(r["seq_solver_s"] for r in rows)
+            / max(sum(r["batched_solver_s"] for r in rows), 1e-9), 2),
+        "max_p999_rel_delta": {
+            k: max(r["p999_rel_delta"][k] for r in rows) for k in METRICS},
+    }
+    return {"rows": rows, "aggregate": agg}
+
+
+def run(force: bool = False, scale: str | None = None) -> dict:
+    scale = scale or SCALE
+    if scale == "tiny":  # CI smoke: always fresh, never cached
+        return _run("tiny")
+    return cached("engine", lambda: _run(scale), force)
+
+
+def main() -> None:
+    import argparse
+    import json
+    import pathlib
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: one small fabric, coarse cadence")
+    ap.add_argument("--force", action="store_true", help="ignore cached results")
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write the result to this JSON file")
+    args = ap.parse_args()
+    out = run(force=args.force, scale="tiny" if args.tiny else None)
+    print(json.dumps(out["aggregate"], indent=2))
+    for r in out["rows"]:
+        print(f"{r['fabric']} (V={r['pods']}, B={r['routing_epochs']}): "
+              f"seq {r['seq_scipy_s']}s vs batched {r['batched_pdhg_warm_s']}s "
+              f"warm ({r['speedup_warm']}x); "
+              f"mlu delta {r['p999_rel_delta']['p999_mlu']}")
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps(out, indent=2))
+    if not args.tiny:
+        assert out["aggregate"]["speedup_warm"] >= 5.0, (
+            "batched engine must be >= 5x over the sequential scipy path "
+            f"at the default fleet scale; got {out['aggregate']['speedup_warm']}x")
+
+
+if __name__ == "__main__":
+    main()

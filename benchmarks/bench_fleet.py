@@ -24,10 +24,14 @@ from repro.core.traffic import skew_fraction_for_share, well_bounded_fraction
 
 def _run():
     p = FLEET_PARAMS[SCALE]
+    # batched plan/execute engine; scipy solves keep fig-18/19/20 numbers
+    # bit-identical to the sequential walk (see bench_engine for the pdhg
+    # speedup study)
     cc = ControllerConfig(routing_interval_hours=p["routing_interval_hours"],
                           topology_interval_days=p["topology_interval_days"],
                           aggregation_days=p["aggregation_days"],
-                          k_critical=p["k_critical"])
+                          k_critical=p["k_critical"],
+                          engine="batched", solver_backend="scipy")
     sc = SolverConfig(stage1_method="scaled")
     rows = []
     for spec, fabric, trace in make_fleet(days=p["days"],

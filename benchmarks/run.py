@@ -47,6 +47,15 @@ def main() -> None:
          f"highvol_mean_p999_loss_reduction={lo['highvol_mean_reduction']:.2f};"
          f"uniform_reduction={lo['hedge_p999_loss_reduction_uniform']:.2f}")
 
+    # ---- batched plan/execute engine: routing hot-path speedup ---------------
+    from benchmarks import bench_engine
+
+    en = bench_engine.run()["aggregate"]
+    emit("engine_batched_speedup", 0.0,
+         f"warm={en['speedup_warm']}x;cold={en['speedup_cold']}x;"
+         f"solver={en['solver_seconds_speedup']}x;"
+         f"max_p999_mlu_delta={en['max_p999_rel_delta']['p999_mlu']}")
+
     # ---- prediction quality: Figs 22/23/24 -----------------------------------
     from benchmarks import bench_prediction
 

@@ -19,9 +19,10 @@ the mapping to the paper's §3/§5 figures.
 """
 
 from repro.burst.expander import BurstParams, expand, from_fleet_spec
-from repro.burst.queue import LossConfig, interval_loss, link_buffer_gb
+from repro.burst.queue import (LossConfig, interval_loss, interval_loss_batched,
+                               link_buffer_gb)
 
 __all__ = [
     "BurstParams", "expand", "from_fleet_spec",
-    "LossConfig", "interval_loss", "link_buffer_gb",
+    "LossConfig", "interval_loss", "interval_loss_batched", "link_buffer_gb",
 ]

@@ -45,7 +45,8 @@ import numpy as np
 
 from repro.burst.expander import BurstParams, expand
 
-__all__ = ["LossConfig", "link_buffer_gb", "interval_loss", "queue_loss_numpy"]
+__all__ = ["LossConfig", "link_buffer_gb", "interval_loss",
+           "interval_loss_batched", "queue_loss_numpy"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +96,18 @@ def queue_loss_numpy(demand: np.ndarray, weights: np.ndarray, cap: np.ndarray,
     return drop, tot
 
 
+def _loss_fractions(drop: np.ndarray, sub: np.ndarray, t: int, n_sub: int,
+                    dt: float) -> np.ndarray:
+    """Aggregate per-sub-step drops (Gb) and sub-interval demand into the
+    per-interval loss fraction (dropped over offered volume, clipped to 1).
+    Shared by the sequential and batched paths so their arithmetic can never
+    drift apart (the paired-seed parity contract)."""
+    drop_i = drop.reshape(t, n_sub).sum(axis=1)  # Gb dropped
+    offered_i = sub.sum(axis=1).reshape(t, n_sub).sum(axis=1) * dt  # Gb demanded
+    return np.where(offered_i > 1e-12,
+                    np.minimum(drop_i / np.maximum(offered_i, 1e-12), 1.0), 0.0)
+
+
 def interval_loss(
     demand: np.ndarray,
     weights: np.ndarray,
@@ -125,7 +138,52 @@ def interval_loss(
         from repro.kernels.queueloss import ops as qlops
 
         drop, _ = qlops.queue_loss(sub, weights, cap, buf, dt, backend=backend)
-    drop_i = drop.reshape(t, cfg.n_sub).sum(axis=1)  # Gb dropped
-    offered_i = sub.sum(axis=1).reshape(t, cfg.n_sub).sum(axis=1) * dt  # Gb demanded
-    return np.where(offered_i > 1e-12,
-                    np.minimum(drop_i / np.maximum(offered_i, 1e-12), 1.0), 0.0)
+    return _loss_fractions(drop, sub, t, cfg.n_sub, dt)
+
+
+def interval_loss_batched(
+    blocks: list,
+    weights: np.ndarray,
+    capacities: np.ndarray,
+    interval_seconds: float,
+    cfg: LossConfig,
+    seeds: list,
+    backend: str = "numpy",
+) -> list:
+    """Batched :func:`interval_loss` over a controller sweep's routing epochs.
+
+    Args:
+      blocks: list of per-epoch ``(T_b, C)`` demand blocks (lengths may vary).
+      weights: ``(B, C, E_d)`` per-epoch routing-weight matrices.
+      capacities: ``(B, E_d)`` per-epoch directed capacities.
+      seeds: per-epoch burst seeds (the controller uses ``cfg.seed + start``
+        so comparisons stay paired across strategies).
+
+    Burst expansion stays per-epoch (each epoch draws its own realization
+    from its seed, bit-identical to the sequential controller); the queue
+    scan runs as one epoch-batched call on the jax/pallas backends
+    (:func:`repro.kernels.queueloss.ops.queue_loss_batched`), zero-padding
+    short epochs — padded sub-steps only drain queues and never drop.
+    Returns a list of per-epoch ``(T_b,)`` loss-fraction arrays.
+    """
+    b = len(blocks)
+    if b == 0:
+        return []
+    cap = np.asarray(capacities, np.float64)
+    dt = interval_seconds / cfg.n_sub
+    subs, lens = [], []
+    for block, seed in zip(blocks, seeds):
+        block = np.asarray(block, np.float64)
+        lens.append(block.shape[0])
+        subs.append(expand(block, cfg.n_sub, cfg.burst, seed))
+    ts_max = max(lens) * cfg.n_sub
+    sub_b = np.zeros((b, ts_max, subs[0].shape[1]), np.float64)
+    for i, s in enumerate(subs):
+        sub_b[i, : s.shape[0]] = s
+    buf_b = np.stack([link_buffer_gb(c, cfg.buffer_ms) for c in cap])
+    from repro.kernels.queueloss import ops as qlops
+
+    drop_b, _ = qlops.queue_loss_batched(sub_b, weights, cap, buf_b, dt,
+                                         backend=backend)
+    return [_loss_fractions(drop_b[i, : n * cfg.n_sub], s, n, cfg.n_sub, dt)
+            for i, (s, n) in enumerate(zip(subs, lens))]

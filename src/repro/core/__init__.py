@@ -11,6 +11,7 @@ from repro.core.clustering import critical_tms
 from repro.core.solver import STRATEGIES, GeminiSolution, SolverConfig, Strategy, solve
 from repro.core.simulator import IntervalMetrics, route_metrics, summarize
 from repro.core.controller import ControllerConfig, ControllerResult, run_controller
+from repro.core.engine import ControllerPlan, plan_controller, run_controller_batched
 from repro.core.predictor import Prediction, pick_best, predict
 from repro.burst import BurstParams, LossConfig
 
@@ -19,6 +20,7 @@ __all__ = [
     "routing_weight_matrix", "Trace", "critical_tms", "STRATEGIES",
     "GeminiSolution", "SolverConfig", "Strategy", "solve", "IntervalMetrics",
     "route_metrics", "summarize", "ControllerConfig", "ControllerResult",
-    "run_controller", "Prediction", "pick_best", "predict",
+    "run_controller", "ControllerPlan", "plan_controller",
+    "run_controller_batched", "Prediction", "pick_best", "predict",
     "BurstParams", "LossConfig",
 ]

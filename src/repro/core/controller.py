@@ -45,6 +45,17 @@ class ControllerConfig:
     # burst-level loss tracking; None = off.  The loss seed is shared across
     # strategies, so comparisons are paired under identical burst realizations.
     loss: LossConfig | None = None
+    # "batched": plan/execute engine (repro.core.engine) — routing epochs are
+    # solved and scored in batch; "sequential": the legacy per-epoch walk.
+    engine: str = "batched"
+    # routing-only solves: "scipy" (HiGHS LPs, the fallback/baseline) or
+    # "pdhg" (vmapped JAX first-order solver, repro.core.jaxlp).
+    solver_backend: str = "scipy"
+    pdhg_max_iters: int = 3000  # PDHG iteration cap per stage
+    # PDHG early-exit tolerance: certified relative duality gap (stage 1) /
+    # objective stall (stages 2–3).  The realized objective error at exit is
+    # typically 3–10× below the certified gap.
+    pdhg_tol: float = 1e-2
 
 
 @dataclasses.dataclass
@@ -72,6 +83,12 @@ def run_controller(
 ) -> ControllerResult:
     cc = cc or ControllerConfig()
     sc = sc or SolverConfig()
+    if cc.engine == "batched":
+        from repro.core.engine import run_controller_batched
+
+        return run_controller_batched(fabric, trace, strategy, cc, sc)
+    if cc.engine != "sequential":
+        raise ValueError(f"unknown engine {cc.engine!r}")
     paths = build_paths(fabric.n_pods)
     ipd = trace.intervals_per_day()
     agg = max(1, int(round(cc.aggregation_days * ipd)))
@@ -102,7 +119,7 @@ def run_controller(
             n_topology += 1
             next_topo = start + topo_step
             # routing must target the *realized* (integer) capacities
-            sol = _solve_routing_only(fabric, tms, fixed, sc, window, cap)
+            sol = _solve_routing_only(fabric, tms, fixed, sc, window, cap, cc)
             solver_s += sol.solve_seconds
         else:
             if cap is None:
@@ -111,7 +128,7 @@ def run_controller(
                 n_realized = realize(fabric, n0)[0] if cc.realize_topology else n0
                 cap = fabric.capacities(n_realized)
             # routing-only re-solve on the current realized topology
-            sol = _solve_routing_only(fabric, tms, fixed, sc, window, cap)
+            sol = _solve_routing_only(fabric, tms, fixed, sc, window, cap, cc)
             solver_s += sol.solve_seconds
         n_routing += 1
         transit_mass += sol.transit_fraction(paths)
@@ -142,33 +159,41 @@ def run_controller(
     )
 
 
-def _solve_routing_only(fabric, tms, strategy, sc, window, capacities) -> GeminiSolution:
-    """Fixed-capacity routing re-solve (stages 1 → [2] → 3 with C given)."""
+def _solve_routing_only(fabric, tms, strategy, sc, window, capacities,
+                        cc: ControllerConfig | None = None) -> GeminiSolution:
+    """Fixed-capacity routing re-solve (stages 1 → [2] → 3 with C given).
+
+    ``cc.solver_backend`` selects scipy/HiGHS LPs (default) or the jitted
+    PDHG solver (``"pdhg"``, :mod:`repro.core.jaxlp`) — the same per-epoch
+    pipeline the batched engine runs as one vmapped call.
+    """
     import time
 
-    from repro.core.lp import LpBuilder, estimate_delta
+    from repro.core.lp import estimate_delta
 
+    cc = cc or ControllerConfig(engine="sequential")
     t0 = time.perf_counter()
-    paths = build_paths(fabric.n_pods)
     delta = 0.0
     if strategy.hedging:
         delta = sc.delta if sc.delta is not None else estimate_delta(window, sc.delta_quantile)
-    b = LpBuilder(fabric, paths, tms, delta=delta)
-    res1 = b.solve_stage1_fixed_topology(capacities)
-    if not res1.ok:
-        raise RuntimeError(f"routing stage 1 failed on {fabric.name}")
-    u_star, f = float(res1.scalar), res1.f
-    r_star = None
-    if strategy.hedging and delta > 0:
-        res2 = b.solve_stage2_fixed_topology(capacities, u_star * 1.005 + 1e-9)
-        if res2.ok:
-            r_star, f = float(res2.scalar), res2.f
-    if not sc.skip_stage3:
-        res3 = b.solve_stage3(u_star * 1.005 + 1e-9,
-                              None if r_star is None else r_star * 1.005 + 1e-12,
-                              capacities)
-        if res3.ok:
-            f = res3.f
+    if cc.solver_backend == "pdhg":
+        from repro.core.engine import _pad_tms, routing_solver_for
+
+        solver = routing_solver_for(fabric, cc.k_critical,
+                                    cc.pdhg_max_iters, cc.pdhg_tol)
+        out = solver.solve_routing_batch(
+            _pad_tms(np.asarray(tms, float), cc.k_critical)[None],
+            np.asarray(capacities, float)[None],
+            hedging=strategy.hedging, deltas=np.asarray([delta]),
+            skip_stage3=sc.skip_stage3)
+        f, u_star = out["f"][0], float(out["u_star"][0])
+        r_star = (None if out["r_star"] is None or not np.isfinite(out["r_star"][0])
+                  else float(out["r_star"][0]))
+    else:
+        from repro.core.engine import _solve_routing_scipy
+
+        f, u_star, r_star = _solve_routing_scipy(fabric, tms, sc, capacities,
+                                                 delta)
     return GeminiSolution(
         strategy=strategy, fabric=fabric, n_e=np.zeros(fabric.n_trunks), f=f,
         u_star=u_star, r_star=r_star, delta=delta,

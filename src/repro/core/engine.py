@@ -1,0 +1,251 @@
+"""Plan → batch-execute controller engine (paper §4.6 at fleet scale).
+
+The sequential controller walks a trace chronologically, re-solving routing
+from scratch at every step: a scipy/HiGHS LP is rebuilt and solved per epoch,
+and every ``route_step`` block is scored with its own ``route_metrics`` call.
+In a fleet of tens-to-hundreds of fabrics, re-solved every 15 minutes, that
+loop is the production hot path.
+
+This module restructures the controller into two passes:
+
+1. **Plan** (:func:`plan_controller` + the walk in
+   :func:`run_controller_batched`): compute every routing epoch's window
+   bounds, critical TMs (zero-padded to the static ``k_critical`` so shapes
+   are jit-stable — zero TM rows are vacuous in all three routing stages),
+   burst estimate δ, and topology-epoch boundaries.  Joint topology solves
+   (the rare, daily events) still run sequentially through the paper's
+   scipy/HiGHS solver, realizing each topology before use.
+2. **Batch-execute**: every routing-only solve shares shape ``(m, C, K)``
+   and a per-epoch capacity vector, so all epochs are solved in one vmapped,
+   jitted PDHG call (:meth:`repro.core.jaxlp.JaxRoutingSolver.solve_routing_batch`)
+   — or sequentially through scipy/HiGHS when
+   ``ControllerConfig.solver_backend == "scipy"`` (the fallback path, and the
+   baseline the engine benchmark measures against).  Scoring is batched too:
+   one :func:`repro.core.simulator.route_metrics_batched` call evaluates the
+   whole trace's per-epoch weight matrices (epoch-batched Pallas kernels on
+   the ``pallas`` backend), including paired-seed burst-loss tracking.
+
+The engine reproduces the sequential controller exactly on the scipy backend
+(same solves, same seeds, same scoring arithmetic) and within first-order
+solver tolerance on the PDHG backend; ``tests/test_core_engine.py`` enforces
+both parities and ``benchmarks/bench_engine.py`` measures the speedup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import clustering
+from repro.core.graph import Fabric, uniform_topology
+from repro.core.lp import estimate_delta
+from repro.core.paths import build_paths, routing_weight_matrices
+from repro.core.rounding import realize
+from repro.core.simulator import route_metrics_batched, summarize
+from repro.core.solver import GeminiSolution, SolverConfig, Strategy, solve
+from repro.core.traffic import Trace
+
+__all__ = ["EpochPlan", "ControllerPlan", "plan_controller",
+           "run_controller_batched", "routing_solver_for"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochPlan:
+    """One routing epoch of the sweep."""
+
+    index: int  # routing-update index (also the critical-TM k-means seed)
+    start: int  # first scored interval (window is demand[start-agg : start])
+    stop: int  # one past the last scored interval
+    topo_solve: bool  # a joint topology re-solve fires at this epoch
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerPlan:
+    """Static structure of a controller sweep over one trace."""
+
+    agg: int  # aggregation window, in intervals
+    route_step: int  # routing reconfiguration period, in intervals
+    topo_step: int  # topology reconfiguration period, in intervals
+    epochs: tuple  # tuple[EpochPlan]
+
+    @property
+    def n_routing(self) -> int:
+        return len(self.epochs)
+
+    @property
+    def n_topology(self) -> int:
+        return sum(e.topo_solve for e in self.epochs)
+
+
+def plan_controller(trace: Trace, cc, nonuniform: bool) -> ControllerPlan:
+    """Walk the trace computing epoch boundaries (no solving).
+
+    Mirrors the sequential controller exactly: the first aggregation window
+    is warm-up, topology re-solves (nonuniform strategies only) fire at
+    warm-up end and then whenever a routing step reaches ``next_topo``.
+    """
+    ipd = trace.intervals_per_day()
+    agg = max(1, int(round(cc.aggregation_days * ipd)))
+    route_step = max(1, int(round(cc.routing_interval_hours * ipd / 24.0)))
+    topo_step = max(route_step, int(round(cc.topology_interval_days * ipd)))
+    if trace.n_intervals <= agg:
+        raise ValueError("trace shorter than the aggregation window")
+    epochs = []
+    next_topo = agg
+    first = True
+    for i, start in enumerate(range(agg, trace.n_intervals, route_step)):
+        topo = nonuniform and (first or start >= next_topo)
+        if topo:
+            next_topo = start + topo_step
+        epochs.append(EpochPlan(index=i, start=start,
+                                stop=min(start + route_step, trace.n_intervals),
+                                topo_solve=topo))
+        first = False
+    return ControllerPlan(agg=agg, route_step=route_step, topo_step=topo_step,
+                          epochs=tuple(epochs))
+
+
+# one PDHG solver per (pods, m) shape — jit caches are per instance
+_SOLVER_CACHE: dict = {}
+
+
+def routing_solver_for(fabric: Fabric, m: int, max_iters: int, tol: float):
+    """Shared :class:`JaxRoutingSolver` cache (jit traces are expensive)."""
+    from repro.core.jaxlp import JaxRoutingSolver
+
+    key = (fabric.n_pods, m, max_iters, tol)
+    if key not in _SOLVER_CACHE:
+        _SOLVER_CACHE[key] = JaxRoutingSolver(
+            fabric, m, max_iters=max_iters, tol=tol)
+    sol = _SOLVER_CACHE[key]
+    sol.fabric = fabric  # same-shape fabrics share the solver
+    return sol
+
+
+def _pad_tms(tms: np.ndarray, k: int) -> np.ndarray:
+    """Zero-pad critical TMs to the static ``k`` rows.
+
+    Zero rows are exactly vacuous: their load constraints are trivially
+    satisfied and they contribute nothing to the stage-3 cost ``Σ_t d_t``.
+    """
+    if tms.shape[0] >= k:
+        return tms[:k]
+    pad = np.zeros((k - tms.shape[0], tms.shape[1]), tms.dtype)
+    return np.concatenate([tms, pad], axis=0)
+
+
+def _solve_routing_scipy(fabric, tms, sc, capacities, delta):
+    """One fixed-capacity routing re-solve via scipy/HiGHS (stages 1→[2]→3)."""
+    from repro.core.lp import LpBuilder
+
+    paths = build_paths(fabric.n_pods)
+    b = LpBuilder(fabric, paths, tms, delta=delta)
+    res1 = b.solve_stage1_fixed_topology(capacities)
+    if not res1.ok:
+        raise RuntimeError(f"routing stage 1 failed on {fabric.name}")
+    u_star, f = float(res1.scalar), res1.f
+    r_star = None
+    if delta > 0:
+        res2 = b.solve_stage2_fixed_topology(capacities, u_star * 1.005 + 1e-9)
+        if res2.ok:
+            r_star, f = float(res2.scalar), res2.f
+    if not sc.skip_stage3:
+        res3 = b.solve_stage3(u_star * 1.005 + 1e-9,
+                              None if r_star is None else r_star * 1.005 + 1e-12,
+                              capacities)
+        if res3.ok:
+            f = res3.f
+    return f, u_star, r_star
+
+
+def run_controller_batched(
+    fabric: Fabric,
+    trace: Trace,
+    strategy: Strategy,
+    cc=None,
+    sc: SolverConfig | None = None,
+):
+    """Plan → batch-execute equivalent of ``run_controller``.
+
+    Returns a ``ControllerResult`` with the same fields and semantics as the
+    sequential walk; see the module docstring for the parity contract.
+    """
+    from repro.core.controller import ControllerConfig, ControllerResult
+
+    cc = cc or ControllerConfig()
+    sc = sc or SolverConfig()
+    plan = plan_controller(trace, cc, strategy.nonuniform)
+    paths = build_paths(fabric.n_pods)
+    fixed = Strategy(nonuniform=False, hedging=strategy.hedging)
+    solver_s = 0.0
+
+    # ---- phase 1: plan walk — windows, critical TMs, topology epochs --------
+    tms_list, deltas, caps_list = [], [], []
+    cap: np.ndarray | None = None
+    n_realized: np.ndarray | None = None
+    for ep in plan.epochs:
+        window = trace.demand[max(0, ep.start - plan.agg): ep.start]
+        tms = clustering.critical_tms(window, k=cc.k_critical, seed=ep.index)
+        delta = 0.0
+        if strategy.hedging:
+            delta = (sc.delta if sc.delta is not None
+                     else estimate_delta(window, sc.delta_quantile))
+        if ep.topo_solve:
+            sol = solve(fabric, tms, strategy, sc, window_demand=window)
+            solver_s += sol.solve_seconds
+            n_realized = (realize(fabric, sol.n_e)[0]
+                          if cc.realize_topology else sol.n_e)
+            cap = fabric.capacities(n_realized)
+        elif cap is None:
+            n0 = uniform_topology(fabric)
+            n_realized = realize(fabric, n0)[0] if cc.realize_topology else n0
+            cap = fabric.capacities(n_realized)
+        tms_list.append(tms)
+        deltas.append(delta)
+        caps_list.append(cap)
+    caps = np.stack(caps_list)
+
+    # ---- phase 2: batched routing-only solves -------------------------------
+    t0 = time.perf_counter()
+    if cc.solver_backend == "pdhg":
+        solver = routing_solver_for(fabric, cc.k_critical,
+                                    cc.pdhg_max_iters, cc.pdhg_tol)
+        tms_b = np.stack([_pad_tms(t, cc.k_critical) for t in tms_list])
+        out = solver.solve_routing_batch(
+            tms_b, caps, hedging=fixed.hedging,
+            deltas=np.asarray(deltas), skip_stage3=sc.skip_stage3)
+        f_b = out["f"]
+    elif cc.solver_backend == "scipy":
+        f_b = np.stack([
+            _solve_routing_scipy(fabric, tms, sc, c, d)[0]
+            for tms, c, d in zip(tms_list, caps_list, deltas)])
+    else:
+        raise ValueError(f"unknown solver_backend {cc.solver_backend!r}")
+    solver_s += time.perf_counter() - t0
+
+    # ---- phase 3: single-pass batched scoring -------------------------------
+    w_b = routing_weight_matrices(paths, f_b)
+    blocks = [trace.demand[ep.start: ep.stop] for ep in plan.epochs]
+    loss_seeds = ([cc.loss.seed + ep.start for ep in plan.epochs]
+                  if cc.loss is not None else None)
+    metrics = route_metrics_batched(
+        blocks, w_b, caps, cc.overload_threshold, backend=cc.backend,
+        loss_cfg=cc.loss, loss_seeds=loss_seeds,
+        interval_seconds=trace.interval_minutes * 60.0)
+
+    two = paths.path_n_edges == 2
+    transit = float(np.mean(
+        f_b[:, two].sum(axis=1) / np.maximum(f_b.sum(axis=1), 1e-12)))
+
+    return ControllerResult(
+        strategy=strategy,
+        metrics=metrics,
+        summary=summarize(metrics),
+        n_routing_updates=plan.n_routing,
+        n_topology_updates=plan.n_topology,
+        final_topology=np.asarray(n_realized),
+        transit_fraction=transit,
+        solver_seconds=solver_s,
+    )

@@ -31,7 +31,8 @@ import numpy as np
 
 from repro.core.graph import Fabric, directed_edge_index
 
-__all__ = ["PathSet", "build_paths", "routing_weight_matrix"]
+__all__ = ["PathSet", "build_paths", "routing_weight_matrix",
+           "routing_weight_matrices"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,4 +109,21 @@ def routing_weight_matrix(paths: PathSet, f: np.ndarray) -> np.ndarray:
         e = paths.path_edges[:, hop]
         valid = e >= 0
         np.add.at(w, (paths.path_commodity[valid], e[valid]), f[valid])
+    return w
+
+
+def routing_weight_matrices(paths: PathSet, f: np.ndarray) -> np.ndarray:
+    """Batched :func:`routing_weight_matrix`: ``f`` is ``(B, P)`` (one routing
+    epoch per row), returns ``(B, C, E_d)``."""
+    f = np.asarray(f, dtype=np.float64)
+    if f.ndim != 2 or f.shape[1] != paths.n_paths:
+        raise ValueError(f"f must have shape (B, {paths.n_paths}), got {f.shape}")
+    b = f.shape[0]
+    w = np.zeros((b, paths.n_commodities, paths.n_directed), dtype=np.float64)
+    rows = np.arange(b)[:, None]
+    for hop in range(2):
+        e = paths.path_edges[:, hop]
+        valid = e >= 0
+        np.add.at(w, (rows, paths.path_commodity[valid][None, :],
+                      e[valid][None, :]), f[:, valid])
     return w

@@ -29,7 +29,8 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["IntervalMetrics", "route_metrics", "p999", "summarize"]
+__all__ = ["IntervalMetrics", "route_metrics", "route_metrics_batched",
+           "p999", "summarize"]
 
 
 def _concat_loss(a, a_size: int, b, b_size: int):
@@ -114,12 +115,12 @@ def route_metrics(
     elif backend == "jax":
         import jax.numpy as jnp
 
-        util = jnp.asarray(demand) @ jnp.asarray(weights[:, live])
-        util = util / jnp.asarray(cap[live])[None, :]
+        load = jnp.asarray(demand) @ jnp.asarray(weights)  # (T, E) once
+        util = load[:, live] / jnp.asarray(cap[live])[None, :]
         mlu = np.asarray(util.max(axis=1))
         alu = np.asarray(util.mean(axis=1))
         olr = np.asarray((util > overload_threshold).mean(axis=1))
-        load_tot = np.asarray((jnp.asarray(demand) @ jnp.asarray(weights)).sum(axis=1))
+        load_tot = np.asarray(load.sum(axis=1))
     else:
         load = demand @ weights  # (T, E_d)
         util = load[:, live] / cap[None, live]
@@ -138,3 +139,68 @@ def route_metrics(
         loss = interval_loss(demand, weights, cap, interval_seconds, loss_cfg,
                              backend=backend)
     return IntervalMetrics(mlu=mlu, alu=alu, olr=olr, stretch=stretch, loss=loss)
+
+
+def route_metrics_batched(
+    blocks: list,
+    weights: np.ndarray,
+    capacities: np.ndarray,
+    overload_threshold: float = 0.8,
+    backend: str = "numpy",
+    loss_cfg=None,
+    loss_seeds: list | None = None,
+    interval_seconds: float | None = None,
+) -> IntervalMetrics:
+    """Single-pass scoring of an entire controller sweep.
+
+    Instead of one :func:`route_metrics` call per routing epoch, the whole
+    trace's per-epoch weight matrices are evaluated in one batched call —
+    on the ``pallas`` backend this is a single launch of the epoch-batched
+    ``kernels/linkload`` (and ``kernels/queueloss``) kernels, so loads and
+    queue state stay in VMEM across the sweep.
+
+    Args:
+      blocks: list of per-epoch ``(T_b, C)`` demand blocks, in trace order
+        (lengths may differ; short epochs are zero-padded internally).
+      weights: ``(B, C, E_d)`` per-epoch routing-weight matrices.
+      capacities: ``(B, E_d)`` per-epoch directed capacities.
+      loss_cfg / loss_seeds / interval_seconds: with a
+        :class:`repro.burst.LossConfig` and per-epoch seeds, also computes
+        the burst-level loss fraction (seeds must match the sequential
+        controller's ``cfg.seed + start`` so comparisons stay paired).
+
+    Returns the concatenated :class:`IntervalMetrics` over all epochs, in
+    epoch order — identical layout to the sequential controller's concat.
+    """
+    from repro.kernels.linkload import ops as llops
+
+    b = len(blocks)
+    if b == 0:
+        return IntervalMetrics.empty()
+    lens = [np.asarray(bl).shape[0] for bl in blocks]
+    t_pad = max(lens)
+    c = np.asarray(blocks[0]).shape[1]
+    demand_b = np.zeros((b, t_pad, c), np.float64)
+    for i, bl in enumerate(blocks):
+        demand_b[i, : lens[i]] = np.asarray(bl, np.float64)
+    kernel_backend = {"numpy": "numpy", "jax": "jnp", "pallas": "pallas"}[backend]
+    mlu_b, alu_b, olr_b, tot_b = llops.link_metrics_batched(
+        demand_b, weights, capacities, overload_threshold,
+        backend=kernel_backend)
+    dem_tot = demand_b.sum(axis=2)  # (B, T_pad)
+    stretch_b = np.where(dem_tot > 1e-12,
+                         tot_b / np.maximum(dem_tot, 1e-12), 1.0)
+    loss_list = None
+    if loss_cfg is not None:
+        if interval_seconds is None or loss_seeds is None:
+            raise ValueError("loss tracking requires interval_seconds and seeds")
+        from repro.burst import interval_loss_batched
+
+        loss_list = interval_loss_batched(
+            blocks, weights, capacities, interval_seconds, loss_cfg,
+            loss_seeds, backend=backend)
+    trim = lambda arr: np.concatenate(
+        [np.asarray(arr[i][: lens[i]], np.float64) for i in range(b)])
+    return IntervalMetrics(
+        mlu=trim(mlu_b), alu=trim(alu_b), olr=trim(olr_b), stretch=trim(stretch_b),
+        loss=np.concatenate(loss_list) if loss_list is not None else None)

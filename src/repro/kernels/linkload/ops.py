@@ -12,10 +12,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.linkload.linkload import linkload_pallas
-from repro.kernels.linkload.ref import linkload_metrics_ref
+from repro.kernels.linkload.linkload import linkload_pallas, linkload_pallas_batched
+from repro.kernels.linkload.ref import (linkload_metrics_batched_ref,
+                                        linkload_metrics_ref)
 
-__all__ = ["link_metrics"]
+__all__ = ["link_metrics", "link_metrics_batched"]
 
 
 def _pad_to(x: np.ndarray, axis: int, mult: int) -> np.ndarray:
@@ -68,4 +69,56 @@ def link_metrics(demand, weights, capacities, threshold: float = 0.8,
         alu_sum = util.sum(axis=1)
         olr_cnt = (util > threshold).sum(axis=1)
         tot = load.sum(axis=1)
+    return mlu, alu_sum / n_live, olr_cnt / n_live, tot
+
+
+def link_metrics_batched(demand, weights, capacities, threshold: float = 0.8,
+                         backend: str = "pallas",
+                         bt: int = 128, be: int = 128, bc: int = 128):
+    """Epoch-batched :func:`link_metrics`: one call scores every routing epoch
+    of a controller sweep.
+
+    Args:
+      demand: (B, T, C) per-epoch demand blocks (zero-padded rows are fine —
+        they are scored but typically trimmed by the caller).
+      weights: (B, C, E) per-epoch routing-weight matrices.
+      capacities: (B, E) per-epoch directed capacities (topology epochs can
+        differ).
+      threshold / backend / block sizes: as :func:`link_metrics`.
+
+    Returns (mlu, alu, olr, total_load), each of shape (B, T); ALU/OLR are
+    averaged over each epoch's own live links.
+    """
+    demand = np.asarray(demand)
+    weights = np.asarray(weights)
+    cap = np.asarray(capacities, np.float64)
+    live = cap > 1e-9  # (B, E)
+    n_live = np.maximum(live.sum(axis=1), 1)[:, None]  # (B, 1)
+    inv_cap = np.where(live, 1.0 / np.maximum(cap, 1e-9), 0.0)
+
+    t_orig = demand.shape[1]
+    if backend == "pallas":
+        d = _pad_to(_pad_to(demand.astype(np.float32), 1, bt), 2, bc)
+        w = _pad_to(_pad_to(weights.astype(np.float32), 1, bc), 2, be)
+        ic = _pad_to(inv_cap[:, None, :].astype(np.float32), 2, be)
+        interpret = jax.default_backend() == "cpu"
+        mlu, alu_sum, olr_cnt, tot = linkload_pallas_batched(
+            jnp.asarray(d), jnp.asarray(w), jnp.asarray(ic),
+            jnp.full((1, 1), threshold, jnp.float32),
+            bt=bt, be=be, bc=bc, interpret=interpret)
+        mlu, alu_sum, olr_cnt, tot = (
+            np.asarray(x)[:, :t_orig] for x in (mlu, alu_sum, olr_cnt, tot))
+    elif backend in ("jnp", "jax"):
+        mlu, alu_sum, olr_cnt, tot = (
+            np.asarray(x) for x in linkload_metrics_batched_ref(
+                jnp.asarray(demand, jnp.float32),
+                jnp.asarray(weights, jnp.float32),
+                jnp.asarray(inv_cap[:, None, :], jnp.float32), threshold))
+    else:  # numpy
+        load = demand.astype(np.float64) @ weights.astype(np.float64)  # (B,T,E)
+        util = load * inv_cap[:, None, :]
+        mlu = util.max(axis=2)
+        alu_sum = util.sum(axis=2)
+        olr_cnt = (util > threshold).sum(axis=2)
+        tot = load.sum(axis=2)
     return mlu, alu_sum / n_live, olr_cnt / n_live, tot

@@ -20,3 +20,12 @@ def linkload_metrics_ref(demand, w, inv_cap, threshold):
     olr_count = (util > threshold).astype(jnp.float32).sum(axis=1)
     load_sum = load.sum(axis=1)
     return mlu, alu_sum, olr_count, load_sum
+
+
+def linkload_metrics_batched_ref(demand, w, inv_cap, threshold):
+    """Epoch-batched reference: demand (B, T, C), w (B, C, E),
+    inv_cap (B, 1, E); returns each metric with shape (B, T)."""
+    import jax
+
+    return jax.vmap(linkload_metrics_ref, in_axes=(0, 0, 0, None))(
+        demand, w, inv_cap, threshold)

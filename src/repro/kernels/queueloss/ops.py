@@ -14,10 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.queueloss.queueloss import queueloss_pallas
-from repro.kernels.queueloss.ref import queueloss_ref
+from repro.kernels.queueloss.queueloss import queueloss_pallas, queueloss_pallas_batched
+from repro.kernels.queueloss.ref import queueloss_batched_ref, queueloss_ref
 
-__all__ = ["queue_loss"]
+__all__ = ["queue_loss", "queue_loss_batched"]
 
 
 def _pad_to(x: np.ndarray, axis: int, mult: int) -> np.ndarray:
@@ -65,6 +65,49 @@ def queue_loss(demand, weights, capacities, buffers, dt: float,
         drop, tot = (np.asarray(x, np.float64)[:ts_orig] for x in (drop, tot))
     else:  # jnp / jax
         drop, tot = (np.asarray(x, np.float64) for x in queueloss_ref(
+            jnp.asarray(demand), jnp.asarray(weights),
+            jnp.asarray(cap), jnp.asarray(buf), jnp.float32(dt)))
+    return drop, tot
+
+
+def queue_loss_batched(demand, weights, capacities, buffers, dt: float,
+                       backend: str = "pallas",
+                       bt: int = 128, be: int = 128, bc: int = 128):
+    """Epoch-batched :func:`queue_loss`: one call scans every routing epoch.
+
+    Args:
+      demand: (B, TS, C) sub-interval demand blocks, one epoch per row
+        (zero-padded trailing sub-steps only drain queues, never add drops
+        for the real prefix — trim the outputs to each epoch's length).
+      weights: (B, C, E); capacities/buffers: (B, E); dt: sub-step seconds.
+
+    Queue state starts empty in every epoch (the controller's block-boundary
+    reset).  Returns (drop, tot), each (B, TS) float64.
+    """
+    if backend not in ("pallas", "jnp", "jax"):  # numpy: float64 end to end
+        from repro.burst.queue import queue_loss_numpy
+
+        out = [queue_loss_numpy(d, w, c, bf, dt)
+               for d, w, c, bf in zip(demand, weights, capacities, buffers)]
+        return (np.stack([o[0] for o in out]), np.stack([o[1] for o in out]))
+    demand = np.asarray(demand, np.float32)
+    weights = np.asarray(weights, np.float32)
+    cap = np.asarray(capacities, np.float32)
+    buf = np.asarray(buffers, np.float32)
+    ts_orig = demand.shape[1]
+    if backend == "pallas":
+        d = _pad_to(_pad_to(demand, 1, bt), 2, bc)
+        w = _pad_to(_pad_to(weights, 1, bc), 2, be)
+        cp = _pad_to(cap[:, None, :], 2, be)
+        bf = _pad_to(buf[:, None, :], 2, be)
+        interpret = jax.default_backend() == "cpu"
+        drop, tot = queueloss_pallas_batched(
+            jnp.asarray(d), jnp.asarray(w), jnp.asarray(cp), jnp.asarray(bf),
+            jnp.full((1, 1), dt, jnp.float32),
+            bt=bt, be=be, bc=bc, interpret=interpret)
+        drop, tot = (np.asarray(x, np.float64)[:, :ts_orig] for x in (drop, tot))
+    else:  # jnp / jax
+        drop, tot = (np.asarray(x, np.float64) for x in queueloss_batched_ref(
             jnp.asarray(demand), jnp.asarray(weights),
             jnp.asarray(cap), jnp.asarray(buf), jnp.float32(dt)))
     return drop, tot

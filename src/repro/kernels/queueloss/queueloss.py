@@ -38,7 +38,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["queueloss_kernel", "queueloss_pallas"]
+__all__ = ["queueloss_kernel", "queueloss_pallas",
+           "queueloss_batched_kernel", "queueloss_pallas_batched"]
 
 
 def queueloss_kernel(dem_ref, w_ref, cap_ref, buf_ref, dt_ref,
@@ -117,3 +118,92 @@ def queueloss_pallas(demand, w, cap, buf, dt,
         interpret=interpret,
     )(demand, w, cap, buf, dt)
     return drop[:, 0], tot[:, 0]
+
+
+def queueloss_batched_kernel(dem_ref, w_ref, cap_ref, buf_ref, dt_ref,
+                             drop_ref, tot_ref, acc_ref, q_ref):
+    """One (b, bt, be) tile step of the epoch-batched matmul + queue scan.
+
+    Same recurrence as :func:`queueloss_kernel` with a leading batch/epoch
+    grid axis: each epoch has its own routing weights, capacities, and buffer
+    depths, and its queue state starts empty — the (t, e, c) sub-grid restarts
+    at (0, 0, 0) when the batch index advances, which is exactly when the
+    queue scratch is re-zeroed, so epochs are independent (the controller's
+    block-boundary queue reset).
+    """
+    t_idx = pl.program_id(1)
+    e_idx = pl.program_id(2)
+    c_idx = pl.program_id(3)
+    n_c = pl.num_programs(3)
+    bt = acc_ref.shape[0]
+    be = acc_ref.shape[1]
+
+    @pl.when(jnp.logical_and(t_idx == 0, jnp.logical_and(e_idx == 0, c_idx == 0)))
+    def _init_queue():  # start of this epoch's sweep
+        q_ref[...] = jnp.zeros_like(q_ref)
+
+    @pl.when(c_idx == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        dem_ref[0], w_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(c_idx == n_c - 1, e_idx == 0))
+    def _init_out():
+        drop_ref[...] = jnp.zeros_like(drop_ref)
+        tot_ref[...] = jnp.zeros_like(tot_ref)
+
+    @pl.when(c_idx == n_c - 1)
+    def _scan_tile():
+        tot_ref[0] += acc_ref[...].sum(axis=1, keepdims=True)
+        cap_row = cap_ref[0]  # (1, be)
+        buf_row = buf_ref[0]  # (1, be)
+        dt = dt_ref[0, 0]
+        q_slice = pl.ds(e_idx * be, be)
+
+        def body(k, q):
+            load_row = acc_ref[pl.ds(k, 1), :]  # (1, be)
+            x = q + (load_row - cap_row) * dt
+            drop = jnp.maximum(x - buf_row, 0.0)
+            drop_ref[0, pl.ds(k, 1), :] += drop.sum(axis=1, keepdims=True)
+            return jnp.clip(x, 0.0, buf_row)
+
+        q0 = q_ref[:, q_slice]  # (1, be) carried from the previous time tile
+        q_ref[:, q_slice] = jax.lax.fori_loop(0, bt, body, q0)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "be", "bc", "interpret"))
+def queueloss_pallas_batched(demand, w, cap, buf, dt,
+                             bt: int = 128, be: int = 128, bc: int = 128,
+                             interpret: bool = False):
+    """Epoch-batched fused queue-loss scan over pre-padded inputs.
+
+    demand (B, TS, C), w (B, C, E), cap/buf (B, 1, E), dt (1, 1); returns
+    (drop_sum, load_sum), each of shape (B, TS).
+    """
+    b, ts, c = demand.shape
+    _, _, e = w.shape
+    assert ts % bt == 0 and c % bc == 0 and e % be == 0, "inputs must be padded"
+    grid = (b, ts // bt, e // be, c // bc)
+    out_shape = [jax.ShapeDtypeStruct((b, ts, 1), jnp.float32)] * 2
+    out_spec = pl.BlockSpec((1, bt, 1), lambda bi, ti, ei, ci: (bi, ti, 0))
+    drop, tot = pl.pallas_call(
+        queueloss_batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, bc), lambda bi, ti, ei, ci: (bi, ti, ci)),
+            pl.BlockSpec((1, bc, be), lambda bi, ti, ei, ci: (bi, ci, ei)),
+            pl.BlockSpec((1, 1, be), lambda bi, ti, ei, ci: (bi, 0, ei)),
+            pl.BlockSpec((1, 1, be), lambda bi, ti, ei, ci: (bi, 0, ei)),
+            pl.BlockSpec((1, 1), lambda bi, ti, ei, ci: (0, 0)),
+        ],
+        out_specs=[out_spec] * 2,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((bt, be), jnp.float32),  # load tile accumulator
+            pltpu.VMEM((1, e), jnp.float32),  # queue state, reset per epoch
+        ],
+        interpret=interpret,
+    )(demand, w, cap, buf, dt)
+    return drop[..., 0], tot[..., 0]

@@ -37,3 +37,11 @@ def queueloss_ref(demand, w, cap, buf, dt):
 
     _, (drops, tots) = jax.lax.scan(step, jnp.zeros_like(cap), load)
     return drops, tots
+
+
+def queueloss_batched_ref(demand, w, cap, buf, dt):
+    """Epoch-batched reference: demand (B, TS, C), w (B, C, E), cap/buf
+    (B, E); queue state starts empty in every epoch.  Returns (drop_sum,
+    load_sum), each (B, TS)."""
+    return jax.vmap(queueloss_ref, in_axes=(0, 0, 0, 0, None))(
+        demand, w, cap, buf, dt)

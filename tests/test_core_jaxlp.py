@@ -22,6 +22,112 @@ def test_simplex_projection_properties(rng):
     np.testing.assert_allclose(np.asarray(project_simplex_rows(feas)), 1.0 / 7, atol=1e-6)
 
 
+def test_simplex_projection_all_nonpositive_row(rng):
+    """Regression for the rho == 0 guard: an all-nonpositive row must still
+    project to a valid simplex point (mass on the largest entry), not NaN."""
+    import jax.numpy as jnp
+
+    x = jnp.asarray([[-5.0, -3.0, -9.0], [-1e3, -1e3, -1e3], [0.0, 0.0, 0.0]])
+    p = np.asarray(project_simplex_rows(x))
+    assert np.isfinite(p).all()  # the rho >= 1 guard forbids 0/0 → NaN
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, atol=1e-4)
+    assert p[0].argmax() == 1  # mass lands on the largest entry
+
+
+def test_early_exit_fires_before_max_iters():
+    """check_every/tol drive a real convergence-based exit: an easy instance
+    must stop well short of max_iters and still match scipy."""
+    rng = np.random.default_rng(3)
+    v = 6
+    fabric = Fabric.homogeneous("ee", v, radix=40, speed=100.0)
+    window = rng.gamma(2.0, 30.0, size=(50, v * (v - 1)))
+    tms = critical_tms(window, k=4)
+    cap = fabric.capacities(uniform_topology(fabric))
+    u_scipy = LpBuilder(fabric, build_paths(v), tms).solve_stage1_fixed_topology(cap).scalar
+    js = JaxRoutingSolver(fabric, tms.shape[0], max_iters=4000)
+    _, u = js.solve_mlu(tms, cap)
+    assert 0 < js.last_iters < 4000
+    assert u == pytest.approx(u_scipy, rel=2e-2)
+
+
+def test_batched_pipeline_matches_single_solves():
+    """vmapped while_loop solves must equal their single-instance runs, and
+    the padded zero TM rows must be vacuous."""
+    rng = np.random.default_rng(9)
+    v = 6
+    fabric = Fabric.homogeneous("bb", v, radix=40, speed=100.0)
+    cap = fabric.capacities(uniform_topology(fabric))
+    windows = [rng.gamma(2.0, 30.0, size=(50, v * (v - 1))) for _ in range(3)]
+    tms = [critical_tms(w, k=4, seed=i) for i, w in enumerate(windows)]
+    k = max(t.shape[0] for t in tms)
+    padded = np.stack([np.concatenate(
+        [t, np.zeros((k - t.shape[0], t.shape[1]))]) for t in tms])
+    js = JaxRoutingSolver(fabric, k, max_iters=3000)
+    f_b, u_b = js.solve_mlu_batch(padded, np.stack([cap] * 3))
+    for i in range(3):
+        f_i, u_i = js.solve_mlu(padded[i], cap)
+        # vmapped and single execution fuse differently; equality is to
+        # float32 effects, not bit-exact
+        assert u_b[i] == pytest.approx(u_i, rel=1e-4, abs=1e-6)
+        np.testing.assert_allclose(f_b[i], f_i, atol=1e-4)
+        # padding with zero TMs must not move the LP optimum
+        u_ref = LpBuilder(fabric, build_paths(v), tms[i]).solve_stage1_fixed_topology(cap).scalar
+        assert u_i == pytest.approx(u_ref, rel=2e-2)
+
+
+def test_pdhg_risk_nonuniform_capacities():
+    """Regression: the second hop of a transit path must be charged against
+    its own edge's capacity (ic[k, j]), not the first hop's — only visible
+    with heterogeneous link speeds."""
+    rng = np.random.default_rng(21)
+    v = 6
+    fabric = Fabric("hetero", radix=np.full(v, 40),
+                    speed=np.array([40.0, 100.0, 100.0, 40.0, 100.0, 200.0]))
+    window = rng.gamma(2.0, 30.0, size=(60, v * (v - 1)))
+    tms = critical_tms(window, k=4)
+    delta = estimate_delta(window)
+    cap = fabric.capacities(uniform_topology(fabric))
+    assert np.unique(cap).size > 1  # genuinely non-uniform
+    builder = LpBuilder(fabric, build_paths(v), tms, delta=delta)
+    u_star = builder.solve_stage1_fixed_topology(cap).scalar * 1.005
+    r_scipy = builder.solve_stage2_fixed_topology(cap, u_star).scalar
+    js = JaxRoutingSolver(fabric, tms.shape[0], max_iters=4000)
+    f, r_pdhg, u_chk = js.solve_risk(tms, cap, u_star, delta)
+    assert r_pdhg <= r_scipy * 1.2 + 1e-6
+    assert u_chk <= u_star * 1.03 + 1e-6
+    # the returned f must actually satisfy the per-edge risk bound
+    paths = build_paths(v)
+    for hop in range(2):
+        e = paths.path_edges[:, hop]
+        m = e >= 0
+        assert (delta * f[m] / cap[e[m]]).max() <= r_pdhg * 1.05 + 1e-6
+
+
+def test_solve_routing_batch_full_pipeline_vs_scipy():
+    """Anchor-warm-started stage 1→2→3 batch vs the per-stage scipy oracle."""
+    rng = np.random.default_rng(11)
+    v = 6
+    fabric = Fabric.homogeneous("pp", v, radix=40, speed=100.0)
+    cap = fabric.capacities(uniform_topology(fabric))
+    window = rng.gamma(2.0, 30.0, size=(60, v * (v - 1)))
+    tms = critical_tms(window, k=4)
+    delta = estimate_delta(window)
+    b = np.stack([tms] * 4)
+    js = JaxRoutingSolver(fabric, tms.shape[0], max_iters=4000)
+    out = js.solve_routing_batch(b, np.stack([cap] * 4), hedging=True,
+                                 deltas=np.full(4, delta))
+    builder = LpBuilder(fabric, build_paths(v), tms, delta=delta)
+    u_sci = builder.solve_stage1_fixed_topology(cap).scalar
+    r_sci = builder.solve_stage2_fixed_topology(cap, u_sci * 1.005 + 1e-9).scalar
+    assert out["u_star"][0] == pytest.approx(u_sci, rel=2e-2)
+    assert out["r_star"][0] <= r_sci * 1.2 + 1e-6
+    # final f: per-commodity splits sum to one, and MLU budget is respected
+    paths = build_paths(v)
+    sums = np.zeros(paths.n_commodities)
+    np.add.at(sums, paths.path_commodity, out["f"][0])
+    np.testing.assert_allclose(sums, 1.0, atol=1e-4)
+
+
 @pytest.mark.parametrize("seed,v", [(0, 5), (1, 6), (2, 8)])
 def test_pdhg_matches_scipy_stage1(seed, v):
     rng = np.random.default_rng(seed)

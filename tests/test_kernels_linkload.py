@@ -58,6 +58,41 @@ def test_kernel_threshold_counting(rng):
     np.testing.assert_allclose(olr, 1.0 / e, atol=1e-6)
 
 
+@pytest.mark.parametrize("backend", ["pallas", "jnp"])
+def test_linkload_batched_matches_per_epoch(backend, rng):
+    """Epoch-batched kernel == per-epoch numpy calls, with per-epoch weights
+    and capacities (topology epochs differ)."""
+    b, t, c, e = 3, 40, 30, 30
+    d = rng.gamma(2.0, 10.0, (b, t, c))
+    w = rng.random((b, c, e))
+    cap = rng.uniform(50, 500, (b, e))
+    cap[1, : e // 4] = 0.0  # one epoch with dead links
+    mlu, alu, olr, tot = ops.link_metrics_batched(d, w, cap, 0.8, backend=backend)
+    for i in range(b):
+        ref = ops.link_metrics(d[i], w[i], cap[i], 0.8, backend="numpy")
+        for a, r, name in zip((mlu[i], alu[i], olr[i], tot[i]), ref,
+                              ["mlu", "alu", "olr", "tot"]):
+            np.testing.assert_allclose(a, r, rtol=3e-4, atol=1e-4,
+                                       err_msg=f"{name}[{i}]")
+
+
+def test_linkload_batched_numpy_is_float64_exact(rng):
+    """The numpy batched path keeps float64 end to end (the engine's parity
+    contract with the sequential simulator, which never rounds to f32)."""
+    b, t, c, e = 2, 16, 12, 12
+    d = rng.gamma(2.0, 10.0, (b, t, c))
+    w = rng.random((b, c, e))
+    cap = rng.uniform(50, 500, (b, e))
+    mlu, alu, olr, tot = ops.link_metrics_batched(d, w, cap, 0.8, backend="numpy")
+    for i in range(b):
+        load = d[i] @ w[i]
+        util = load / cap[i][None, :]
+        np.testing.assert_allclose(mlu[i], util.max(axis=1), rtol=1e-13)
+        np.testing.assert_allclose(alu[i], util.mean(axis=1), rtol=1e-13)
+        np.testing.assert_allclose(olr[i], (util > 0.8).mean(axis=1), rtol=1e-13)
+        np.testing.assert_allclose(tot[i], load.sum(axis=1), rtol=1e-13)
+
+
 def test_raw_kernel_equals_raw_ref(rng):
     """Direct pallas_call (padded) vs jnp reference on identical inputs."""
     import jax.numpy as jnp

@@ -76,6 +76,39 @@ def test_no_drops_below_capacity(rng):
         np.testing.assert_allclose(tot, (d @ w).sum(axis=1), rtol=3e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("backend", ["pallas", "jnp", "numpy"])
+def test_queueloss_batched_matches_per_epoch(backend, rng):
+    """Epoch-batched scan == per-epoch numpy oracles (queue reset per epoch),
+    including zero-padded trailing sub-steps that must never add drops."""
+    b, ts, c, e = 3, 48, 30, 30
+    d = np.stack([_case(rng, ts, c, e)[0] for _ in range(b)])
+    w = np.stack([rng.random((c, e)) for _ in range(b)])
+    cap = rng.uniform(50, 200, (b, e))
+    buf = cap * 0.02
+    d[2, ts // 2:] = 0.0  # epoch 2 is "short": zero-padded tail
+    drop, tot = ops.queue_loss_batched(d, w, cap, buf, 1.0, backend=backend)
+    for i in range(b):
+        ref_d, ref_t = ops.queue_loss(d[i], w[i], cap[i], buf[i], 1.0,
+                                      backend="numpy")
+        np.testing.assert_allclose(drop[i], ref_d, rtol=3e-4, atol=1e-4)
+        np.testing.assert_allclose(tot[i], ref_t, rtol=3e-4, atol=1e-4)
+    assert drop[2, ts // 2:].max() == 0.0  # padding never drops
+
+
+def test_queueloss_batched_queue_resets_per_epoch(rng):
+    """Two identical overloaded epochs must produce identical drop series —
+    leaked queue state would make the second epoch drop earlier."""
+    ts, e = 128, 8
+    d1 = np.full((ts, e), 10.0)
+    w = np.stack([np.eye(e)] * 2)
+    cap = np.full((2, e), 9.0)
+    buf = np.full((2, e), 60.0)  # fills after 60 steps at dt=1
+    drop, _ = ops.queue_loss_batched(np.stack([d1, d1]), w, cap, buf, 1.0,
+                                     backend="pallas")
+    assert drop[0, :50].max() == 0.0 and drop[0, -1] > 0.0
+    np.testing.assert_allclose(drop[0], drop[1], rtol=3e-4, atol=1e-4)
+
+
 def test_raw_kernel_equals_raw_ref(rng):
     """Direct pallas_call (padded) vs jnp reference on identical inputs."""
     import jax.numpy as jnp
