@@ -1,0 +1,169 @@
+"""Transition bench: what reconfiguration actually costs, and when to skip it.
+
+Exercises the reconfiguration-transition subsystem (:mod:`repro.transition`)
+on volatile fleet fabrics — the class whose frequent topology churn makes the
+§4.6 "when to reconfigure" decision interesting — in three controller
+configurations of the (nonuniform, hedge) strategy:
+
+* **instant**: the legacy instantaneous-and-free topology updates;
+* **staged**: every update applied, but executed as scheduled panel drain
+  stages (``decide=False``) — measures the transition disruption (predicted
+  worst-stage MLU excess over staying put) and how much the drain-schedule
+  optimizer beats the naive ascending-panel order;
+* **decide**: updates gated by ``should_reconfigure`` with a hysteresis
+  calibrated from the staged run's benefit/disruption log, demonstrating the
+  robust decision skipping updates whose predicted benefit does not beat
+  their predicted disruption.
+
+    PYTHONPATH=src python -m benchmarks.bench_transition          # default
+    PYTHONPATH=src python -m benchmarks.bench_transition --tiny   # CI smoke
+    PYTHONPATH=src python -m benchmarks.bench_transition --tiny --json BENCH_transition.json
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import SCALE, cached
+from repro.core import (ControllerConfig, SolverConfig, Strategy,
+                        TransitionConfig, run_controller)
+from repro.core.fleet import FLEET_SPECS, make_fabric, make_trace
+
+# volatile fabrics: F3 (least bounded, vol=1.0) and F6 (max DMR ~13, vol=.75)
+DEFAULT_PARAMS = dict(fabric_indices=(2, 5), days=6.0, interval_minutes=30.0,
+                      routing_interval_hours=6.0, topology_interval_days=1.0,
+                      aggregation_days=2.0, k_critical=6,
+                      n_panels=4, stage_intervals=2)
+# CI smoke: one small volatile fabric (F16: V=8, vol~0.6), coarse cadence
+TINY_PARAMS = dict(fabric_indices=(15,), days=6.0, interval_minutes=120.0,
+                   routing_interval_hours=12.0, topology_interval_days=1.0,
+                   aggregation_days=2.0, k_critical=4,
+                   n_panels=4, stage_intervals=1)
+
+
+def _calibrate_hysteresis(log: list) -> float:
+    """Smallest hysteresis that would veto at least one logged transition.
+
+    The decision is ``benefit > (1 + h) * disruption``; an event with
+    non-positive benefit is vetoed at any ``h``, a zero-disruption event at
+    none (excluded from the ratios below), otherwise the marginal ``h`` is
+    ``benefit / disruption - 1`` (plus a margin).  Skipping changes the
+    downstream topology sequence, so the decide run re-evaluates — this only
+    picks a knob that provably bites on the first vetoed event.
+    """
+    if not log or any(e["benefit"] <= 0.0 or e["benefit"] <= e["disruption"]
+                      for e in log):
+        return 0.0
+    ratios = [e["benefit"] / e["disruption"] for e in log
+              if e["disruption"] > 1e-9]
+    if not ratios:  # every event is unvetoable (zero disruption)
+        return 0.0
+    return float(min(ratios))  # h = ratio - 1 breaks even; ratio vetoes it
+
+
+def _run(scale: str) -> dict:
+    p = TINY_PARAMS if scale == "tiny" else DEFAULT_PARAMS
+    base = ControllerConfig(
+        routing_interval_hours=p["routing_interval_hours"],
+        topology_interval_days=p["topology_interval_days"],
+        aggregation_days=p["aggregation_days"], k_critical=p["k_critical"])
+    sc = SolverConfig(stage1_method="scaled")
+    strat = Strategy(nonuniform=True, hedging=True)
+    tc = TransitionConfig(n_panels=p["n_panels"],
+                          stage_intervals=p["stage_intervals"])
+    rows = []
+    for idx in p["fabric_indices"]:
+        spec = FLEET_SPECS[idx]
+        fabric = make_fabric(spec)
+        trace = make_trace(spec, fabric, days=p["days"],
+                           interval_minutes=p["interval_minutes"])
+        instant = run_controller(fabric, trace, strat, base, sc)
+        staged = run_controller(
+            fabric, trace, strat,
+            dataclasses.replace(base, transition=dataclasses.replace(
+                tc, decide=False)), sc)
+        log = [dict(e) for e in staged.transition_log]
+        hyst = _calibrate_hysteresis(log)
+        decide = run_controller(
+            fabric, trace, strat,
+            dataclasses.replace(base, transition=dataclasses.replace(
+                tc, hysteresis=hyst)), sc)
+        excess = [e["worst_stage_u"] - e["u_old"] for e in log]
+        sched_gain = [e["proxy_worst_naive"] - e["proxy_worst"] for e in log]
+        rows.append({
+            "fabric": spec.name,
+            "pods": fabric.n_pods,
+            "n_transitions": len(log),
+            "total_moves": sum(e["total_moves"] for e in log),
+            "max_worst_stage_excess": round(max(excess, default=0.0), 4),
+            "mean_worst_stage_excess": round(float(np.mean(excess)), 4) if excess else 0.0,
+            "n_schedule_strictly_better": sum(g > 1e-9 for g in sched_gain),
+            "max_schedule_proxy_gain": round(max(sched_gain, default=0.0), 4),
+            "hysteresis": round(hyst, 4),
+            "n_skipped": decide.n_skipped_topology,
+            "n_applied": decide.n_topology_updates,
+            "p999_mlu_instant": round(instant.summary["p999_mlu"], 4),
+            "p999_mlu_staged": round(staged.summary["p999_mlu"], 4),
+            "p999_mlu_decide": round(decide.summary["p999_mlu"], 4),
+            "transition_log": log,
+        })
+    agg = {
+        "scale": scale,
+        "n_fabrics": len(rows),
+        "n_transitions": sum(r["n_transitions"] for r in rows),
+        "max_worst_stage_excess": max(r["max_worst_stage_excess"] for r in rows),
+        "n_schedule_strictly_better": sum(r["n_schedule_strictly_better"]
+                                          for r in rows),
+        "n_skipped": sum(r["n_skipped"] for r in rows),
+        "staged_vs_instant_p999_mlu_delta": round(
+            max(r["p999_mlu_staged"] - r["p999_mlu_instant"] for r in rows), 4),
+    }
+    return {"rows": rows, "aggregate": agg}
+
+
+def run(force: bool = False, scale: str | None = None) -> dict:
+    scale = scale or SCALE
+    if scale == "tiny":  # CI smoke: always fresh, never cached
+        return _run("tiny")
+    return cached("transition", lambda: _run(scale), force)
+
+
+def main() -> None:
+    import argparse
+    import json
+    import pathlib
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: one volatile fabric, coarse cadence")
+    ap.add_argument("--force", action="store_true", help="ignore cached results")
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write the result to this JSON file")
+    args = ap.parse_args()
+    out = run(force=args.force, scale="tiny" if args.tiny else None)
+    print(json.dumps(out["aggregate"], indent=2))
+    for r in out["rows"]:
+        print(f"{r['fabric']} (V={r['pods']}): {r['n_transitions']} transitions, "
+              f"{r['total_moves']} jumper moves; worst-stage MLU excess "
+              f"{r['max_worst_stage_excess']}; schedule beats naive on "
+              f"{r['n_schedule_strictly_better']} (max proxy gain "
+              f"{r['max_schedule_proxy_gain']}); decide(h={r['hysteresis']}) "
+              f"skipped {r['n_skipped']}, applied {r['n_applied']}")
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps(out, indent=2))
+    # the acceptance gates hold at every scale (tiny included — the fleet is
+    # deterministic, so CI checks the subsystem's behavior, not just liveness)
+    agg = out["aggregate"]
+    assert agg["n_transitions"] >= 1, "no topology transition was evaluated"
+    assert agg["max_worst_stage_excess"] > 0.0, \
+        "transitions must show nonzero worst-stage disruption"
+    assert agg["n_schedule_strictly_better"] >= 1, \
+        "the drain schedule must beat the naive panel order somewhere"
+    assert agg["n_skipped"] >= 1, \
+        "should_reconfigure must skip at least one low-benefit update"
+
+
+if __name__ == "__main__":
+    main()

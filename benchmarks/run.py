@@ -56,6 +56,16 @@ def main() -> None:
          f"solver={en['solver_seconds_speedup']}x;"
          f"max_p999_mlu_delta={en['max_p999_rel_delta']['p999_mlu']}")
 
+    # ---- reconfiguration transitions: §A/Thm. 4 + §4.6 decision --------------
+    from benchmarks import bench_transition
+
+    tr = bench_transition.run()["aggregate"]
+    emit("sec46_transition_decision", 0.0,
+         f"max_worst_stage_excess={tr['max_worst_stage_excess']:.3f};"
+         f"schedule_beats_naive={tr['n_schedule_strictly_better']}"
+         f"/{tr['n_transitions']};skipped={tr['n_skipped']};"
+         f"staged_p999_mlu_delta={tr['staged_vs_instant_p999_mlu_delta']}")
+
     # ---- prediction quality: Figs 22/23/24 -----------------------------------
     from benchmarks import bench_prediction
 

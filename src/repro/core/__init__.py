@@ -14,6 +14,7 @@ from repro.core.controller import ControllerConfig, ControllerResult, run_contro
 from repro.core.engine import ControllerPlan, plan_controller, run_controller_batched
 from repro.core.predictor import Prediction, pick_best, predict
 from repro.burst import BurstParams, LossConfig
+from repro.transition import TransitionConfig, should_reconfigure
 
 __all__ = [
     "Fabric", "uniform_topology", "PathSet", "build_paths",
@@ -22,5 +23,5 @@ __all__ = [
     "route_metrics", "summarize", "ControllerConfig", "ControllerResult",
     "run_controller", "ControllerPlan", "plan_controller",
     "run_controller_batched", "Prediction", "pick_best", "predict",
-    "BurstParams", "LossConfig",
+    "BurstParams", "LossConfig", "TransitionConfig", "should_reconfigure",
 ]

@@ -13,6 +13,16 @@ With ``ControllerConfig.loss`` set (a :class:`repro.burst.LossConfig`), every
 scored interval additionally carries the burst-level packet-loss fraction
 from the sub-interval fluid-queue model (:mod:`repro.burst`) — the paper's
 headline §3/§5 metric.
+
+With ``ControllerConfig.transition`` set (a :class:`repro.transition.
+TransitionConfig`), topology updates stop being instantaneous and free:
+each one is diffed onto patch panels (§A, Thm. 4), executed as a scheduled
+sequence of panel drain stages whose residual capacities the first intervals
+of the topology epoch are scored under, and gated by the §4.6
+benefit-vs-disruption :func:`repro.transition.should_reconfigure` rule
+(skipped updates count in ``ControllerResult.n_skipped_topology``).  Unset
+(the default), controller output is bit-identical to the legacy
+instantaneous behavior.
 """
 
 from __future__ import annotations
@@ -29,6 +39,7 @@ from repro.core.rounding import realize
 from repro.core.simulator import IntervalMetrics, route_metrics, summarize
 from repro.core.solver import GeminiSolution, SolverConfig, Strategy, solve
 from repro.core.traffic import Trace
+from repro.transition.config import TransitionConfig
 
 __all__ = ["ControllerConfig", "ControllerResult", "run_controller"]
 
@@ -56,6 +67,10 @@ class ControllerConfig:
     # objective stall (stages 2–3).  The realized objective error at exit is
     # typically 3–10× below the certified gap.
     pdhg_tol: float = 1e-2
+    # reconfiguration-transition modeling (repro.transition): None (default)
+    # keeps topology updates instantaneous and free, bit-identical to the
+    # pre-transition controller.
+    transition: TransitionConfig | None = None
 
 
 @dataclasses.dataclass
@@ -68,6 +83,10 @@ class ControllerResult:
     final_topology: np.ndarray  # integer trunks if realized
     transit_fraction: float
     solver_seconds: float
+    # topology updates vetoed by the §4.6 benefit-vs-disruption rule
+    n_skipped_topology: int = 0
+    # one dict per evaluated transition (see TransitionEval.log_entry)
+    transition_log: tuple = ()
 
 
 def _window(trace: Trace, end: int, n: int) -> np.ndarray:
@@ -83,6 +102,9 @@ def run_controller(
 ) -> ControllerResult:
     cc = cc or ControllerConfig()
     sc = sc or SolverConfig()
+    if cc.transition is not None and not cc.realize_topology:
+        # panel decomposition (Thm. 4) needs integer, even-degree topologies
+        raise ValueError("ControllerConfig.transition requires realize_topology")
     if cc.engine == "batched":
         from repro.core.engine import run_controller_batched
 
@@ -99,7 +121,9 @@ def run_controller(
 
     metrics = IntervalMetrics.empty()
     n_routing, n_topology, solver_s = 0, 0, 0.0
+    n_skipped, transition_log = 0, []
     transit_mass, transit_n = 0.0, 0
+    tc = cc.transition
 
     sol: GeminiSolution | None = None
     n_realized: np.ndarray | None = None
@@ -110,13 +134,27 @@ def run_controller(
     for start in range(agg, trace.n_intervals, route_step):
         window = _window(trace, start, agg)
         tms = clustering.critical_tms(window, k=cc.k_critical, seed=n_routing)
+        staged = None  # TransitionEval whose drain stages score this epoch
         if strategy.nonuniform and (sol is None or start >= next_topo):
             # full joint solve: new topology + routing
             sol = solve(fabric, tms, strategy, sc, window_demand=window)
             solver_s += sol.solve_seconds
-            n_realized = realize(fabric, sol.n_e)[0] if cc.realize_topology else sol.n_e
-            cap = fabric.capacities(n_realized)
-            n_topology += 1
+            cand = realize(fabric, sol.n_e)[0] if cc.realize_topology else sol.n_e
+            cand_cap = fabric.capacities(cand)
+            apply = True
+            if tc is not None and n_realized is not None:
+                apply, staged, ev, ev_s = _transition_gate(
+                    fabric, tms, n_realized, cand, tc, cc, sc,
+                    delta=sol.delta, hedging=strategy.hedging,
+                    horizon_intervals=topo_step)
+                solver_s += ev_s
+                if ev is not None:
+                    transition_log.append(ev.log_entry(start, apply))
+            if apply:
+                n_realized, cap = cand, cand_cap
+                n_topology += 1
+            else:
+                n_skipped += 1
             next_topo = start + topo_step
             # routing must target the *realized* (integer) capacities
             sol = _solve_routing_only(fabric, tms, fixed, sc, window, cap, cc)
@@ -136,16 +174,23 @@ def run_controller(
 
         w = routing_weight_matrix(paths, sol.f)
         block = trace.demand[start : start + route_step]
+        rem_lo, rem_seed = 0, (cc.loss.seed + start if cc.loss is not None
+                               else None)
+        if staged is not None:
+            stage_m, rem_lo, rem_seed = _score_stages(block, staged, cc,
+                                                      trace, start)
+            metrics = metrics.concat(stage_m)
         # vary the burst seed per block (identical bursts in every block would
         # collapse the p99.9 onto one replayed realization) while keeping it a
         # pure function of (cc.loss.seed, start) — strategies walk the same
         # starts, so comparisons stay paired under identical bursts
-        loss_cfg = (dataclasses.replace(cc.loss, seed=cc.loss.seed + start)
+        loss_cfg = (dataclasses.replace(cc.loss, seed=rem_seed)
                     if cc.loss is not None else None)
-        metrics = metrics.concat(
-            route_metrics(block, w, cap, cc.overload_threshold, backend=cc.backend,
-                          loss_cfg=loss_cfg,
-                          interval_seconds=trace.interval_minutes * 60.0))
+        if block.shape[0] - rem_lo > 0:
+            metrics = metrics.concat(
+                route_metrics(block[rem_lo:], w, cap, cc.overload_threshold,
+                              backend=cc.backend, loss_cfg=loss_cfg,
+                              interval_seconds=trace.interval_minutes * 60.0))
 
     return ControllerResult(
         strategy=strategy,
@@ -156,7 +201,62 @@ def run_controller(
         final_topology=np.asarray(n_realized),
         transit_fraction=transit_mass / max(transit_n, 1),
         solver_seconds=solver_s,
+        n_skipped_topology=n_skipped,
+        transition_log=tuple(transition_log),
     )
+
+
+def _transition_gate(fabric, tms, n_old, n_new, tc, cc, sc, *,
+                     delta, hedging, horizon_intervals):
+    """Evaluate a topology change and decide whether to apply it.
+
+    The single gating implementation shared by the sequential walk and the
+    batched engine (their decision semantics must never drift — parity is
+    test-enforced).  Returns ``(apply, staged, ev, seconds)``: the decision,
+    the :class:`TransitionEval` whose drain stages the epoch scores under
+    (None when skipping or modeling instantaneously), the evaluation for
+    transition-log bookkeeping (None when the change needs no jumper moves
+    and is applied for free), and the evaluation wall-clock.
+    """
+    import time
+
+    from repro.transition import evaluate_transition, should_reconfigure
+
+    t0 = time.perf_counter()
+    ev = evaluate_transition(fabric, tms, n_old, n_new, tc, cc, sc,
+                             delta=delta, hedging=hedging,
+                             horizon_intervals=horizon_intervals)
+    if ev is None:
+        return True, None, None, time.perf_counter() - t0
+    apply = (not tc.decide) or should_reconfigure(ev.benefit, ev.disruption,
+                                                  tc.hysteresis)
+    staged = ev if apply and not tc.instantaneous else None
+    return apply, staged, ev, time.perf_counter() - t0
+
+
+def _score_stages(block, ev, cc, trace, start):
+    """Score a topology epoch's leading drain stages in one batched call.
+
+    The stages map onto the leading batch axis of
+    :func:`repro.core.simulator.route_metrics_batched` (the epoch-batched
+    linkload/queueloss kernels); span and burst-seed arithmetic comes from
+    the engine-shared :func:`repro.transition.stage_partition`.  Returns
+    ``(metrics, rem_lo, rem_seed)`` — the concatenated staged metrics, the
+    offset at which the steady new topology takes over, and its burst seed.
+    """
+    from repro.core.simulator import route_metrics_batched
+    from repro.transition import stage_partition
+
+    spans, seeds, rem_lo, rem_seed = stage_partition(
+        ev, block.shape[0], start,
+        cc.loss.seed if cc.loss is not None else None)
+    idx = [k for k, _, _ in spans]
+    stage_m = route_metrics_batched(
+        [block[lo:hi] for _, lo, hi in spans],
+        ev.stage_w[idx], ev.stage_caps[idx], cc.overload_threshold,
+        backend=cc.backend, loss_cfg=cc.loss, loss_seeds=seeds,
+        interval_seconds=trace.interval_minutes * 60.0)
+    return stage_m, rem_lo, rem_seed
 
 
 def _solve_routing_only(fabric, tms, strategy, sc, window, capacities,

@@ -176,13 +176,18 @@ def run_controller_batched(
 
     cc = cc or ControllerConfig()
     sc = sc or SolverConfig()
+    if cc.transition is not None and not cc.realize_topology:
+        # panel decomposition (Thm. 4) needs integer, even-degree topologies
+        raise ValueError("ControllerConfig.transition requires realize_topology")
     plan = plan_controller(trace, cc, strategy.nonuniform)
     paths = build_paths(fabric.n_pods)
     fixed = Strategy(nonuniform=False, hedging=strategy.hedging)
     solver_s = 0.0
 
     # ---- phase 1: plan walk — windows, critical TMs, topology epochs --------
-    tms_list, deltas, caps_list = [], [], []
+    tc = cc.transition
+    tms_list, deltas, caps_list, staging = [], [], [], []
+    n_topology, n_skipped, transition_log = 0, 0, []
     cap: np.ndarray | None = None
     n_realized: np.ndarray | None = None
     for ep in plan.epochs:
@@ -192,12 +197,29 @@ def run_controller_batched(
         if strategy.hedging:
             delta = (sc.delta if sc.delta is not None
                      else estimate_delta(window, sc.delta_quantile))
+        staged = None  # TransitionEval whose drain stages score this epoch
         if ep.topo_solve:
             sol = solve(fabric, tms, strategy, sc, window_demand=window)
             solver_s += sol.solve_seconds
-            n_realized = (realize(fabric, sol.n_e)[0]
-                          if cc.realize_topology else sol.n_e)
-            cap = fabric.capacities(n_realized)
+            cand = (realize(fabric, sol.n_e)[0]
+                    if cc.realize_topology else sol.n_e)
+            cand_cap = fabric.capacities(cand)
+            apply = True
+            if tc is not None and n_realized is not None:
+                from repro.core.controller import _transition_gate
+
+                apply, staged, ev, ev_s = _transition_gate(
+                    fabric, tms, n_realized, cand, tc, cc, sc,
+                    delta=delta, hedging=strategy.hedging,
+                    horizon_intervals=plan.topo_step)
+                solver_s += ev_s
+                if ev is not None:
+                    transition_log.append(ev.log_entry(ep.start, apply))
+            if apply:
+                n_realized, cap = cand, cand_cap
+                n_topology += 1
+            else:
+                n_skipped += 1
         elif cap is None:
             n0 = uniform_topology(fabric)
             n_realized = realize(fabric, n0)[0] if cc.realize_topology else n0
@@ -205,6 +227,7 @@ def run_controller_batched(
         tms_list.append(tms)
         deltas.append(delta)
         caps_list.append(cap)
+        staging.append(staged)
     caps = np.stack(caps_list)
 
     # ---- phase 2: batched routing-only solves -------------------------------
@@ -226,13 +249,35 @@ def run_controller_batched(
     solver_s += time.perf_counter() - t0
 
     # ---- phase 3: single-pass batched scoring -------------------------------
+    # Drain stages slot in as extra blocks on the same leading batch axis, so
+    # a transition-heavy sweep still scores in one epoch-batched kernel call.
     w_b = routing_weight_matrices(paths, f_b)
-    blocks = [trace.demand[ep.start: ep.stop] for ep in plan.epochs]
-    loss_seeds = ([cc.loss.seed + ep.start for ep in plan.epochs]
-                  if cc.loss is not None else None)
+    blocks, block_w, block_caps, loss_seeds = [], [], [], []
+    for i, ep in enumerate(plan.epochs):
+        block = trace.demand[ep.start: ep.stop]
+        rem_lo, rem_seed = 0, (cc.loss.seed + ep.start
+                               if cc.loss is not None else None)
+        if staging[i] is not None:
+            from repro.transition import stage_partition
+
+            ev = staging[i]
+            spans, seeds, rem_lo, rem_seed = stage_partition(
+                ev, block.shape[0], ep.start,
+                cc.loss.seed if cc.loss is not None else None)
+            for s, (k, lo, hi) in enumerate(spans):
+                blocks.append(block[lo:hi])
+                block_w.append(ev.stage_w[k])
+                block_caps.append(ev.stage_caps[k])
+                loss_seeds.append(seeds[s] if seeds is not None else 0)
+        if block.shape[0] - rem_lo > 0:
+            blocks.append(block[rem_lo:])
+            block_w.append(w_b[i])
+            block_caps.append(caps[i])
+            loss_seeds.append(rem_seed if rem_seed is not None else 0)
     metrics = route_metrics_batched(
-        blocks, w_b, caps, cc.overload_threshold, backend=cc.backend,
-        loss_cfg=cc.loss, loss_seeds=loss_seeds,
+        blocks, np.stack(block_w), np.stack(block_caps), cc.overload_threshold,
+        backend=cc.backend, loss_cfg=cc.loss,
+        loss_seeds=loss_seeds if cc.loss is not None else None,
         interval_seconds=trace.interval_minutes * 60.0)
 
     two = paths.path_n_edges == 2
@@ -244,8 +289,10 @@ def run_controller_batched(
         metrics=metrics,
         summary=summarize(metrics),
         n_routing_updates=plan.n_routing,
-        n_topology_updates=plan.n_topology,
+        n_topology_updates=n_topology,
         final_topology=np.asarray(n_realized),
         transit_fraction=transit,
         solver_seconds=solver_s,
+        n_skipped_topology=n_skipped,
+        transition_log=tuple(transition_log),
     )

@@ -19,9 +19,14 @@ Construction (the paper's proof, implemented):
 
 We generalize slightly: degrees need only be *even* (not a power of two); a
 pod with degree ``2r_v < 2r_max`` simply contributes fewer links and the
-decomposition yields ``r_max`` "2-or-0-factors" (degree ≤ 2 everywhere), which
-still map onto fixed per-panel port budgets of ``ceil(2 r_v / panels)``.  For
-power-of-two radixes this reduces exactly to Theorem 4.
+decomposition yields ``r_max`` "2-or-0-factors" (degree ≤ 2 everywhere).  When
+the graph is *regular* (``r_v = r_max`` everywhere) and ``panels`` divides
+``r_max``, round-robin grouping of the factors meets the fixed per-panel port
+budget of ``ceil(2 r_v / panels)`` exactly — for power-of-two radixes this
+reduces exactly to Theorem 4.  For irregular graphs (or panel counts that do
+not divide ``r_max``) whole-factor grouping can only guarantee the looser
+``2 * ceil(n_factors / panels)`` per node; the budget property is tested in
+the regular regime (``tests/test_patch_panels.py``).
 """
 
 from __future__ import annotations
@@ -44,9 +49,8 @@ class PanelAssignment:
     def links_per_pod_per_panel(self, n_pods: int) -> np.ndarray:
         out = np.zeros((len(self.panel_edges), n_pods), dtype=np.int64)
         for p, edges in enumerate(self.panel_edges):
-            for i, j in edges:
-                out[p, i] += 1
-                out[p, j] += 1
+            if edges.size:
+                np.add.at(out[p], edges.reshape(-1), 1)
         return out
 
 
@@ -101,27 +105,55 @@ def eulerian_orientation(n_pods: int, links: list) -> list:
     return directed
 
 
-def _perfect_matching(n: int, adj: list) -> list | None:
-    """Hopcroft–Karp-lite: max bipartite matching via repeated augmenting DFS.
-    ``adj[u]`` = multiset dict of right-nodes.  Returns list pairing each left
-    u with a right node, or None if no perfect matching over active nodes."""
-    match_l = [-1] * n
-    match_r = [-1] * n
+def _augment(u0: int, adj: list, match_l: list, match_r: list, n: int) -> bool:
+    """One augmenting-path search (Kuhn DFS), iterative.
 
-    def try_kuhn(u, seen):
-        for v in adj[u]:
+    The recursive formulation recurses once per edge of the alternating path;
+    on large-radix fabrics (F22-class: radix 64, high trunk multiplicity) the
+    path can exceed Python's recursion limit, so the DFS keeps an explicit
+    stack of ``(left node, neighbor iterator)`` frames instead.  ``via[v]``
+    records the left node that first reached right node ``v``; flipping the
+    matched edges back along that chain performs the augmentation.
+    """
+    seen = [False] * n
+    via = [-1] * n  # right node -> left node that discovered it
+    stack = [(u0, iter(adj[u0]))]
+    while stack:
+        u, it = stack[-1]
+        advanced = False
+        for v in it:
             if adj[u][v] <= 0 or seen[v]:
                 continue
             seen[v] = True
-            if match_r[v] == -1 or try_kuhn(match_r[v], seen):
-                match_l[u] = v
-                match_r[v] = u
-                return True
-        return False
+            via[v] = u
+            w = match_r[v]
+            if w == -1:
+                while True:  # flip along u0 ... via[v] -> v
+                    u2 = via[v]
+                    prev_v = match_l[u2]
+                    match_l[u2] = v
+                    match_r[v] = u2
+                    if u2 == u0:
+                        return True
+                    v = prev_v
+            stack.append((w, iter(adj[w])))
+            advanced = True
+            break
+        if not advanced:
+            stack.pop()
+    return False
 
+
+def _perfect_matching(n: int, adj: list) -> list | None:
+    """Hopcroft–Karp-lite: max bipartite matching via repeated augmenting DFS
+    (iterative — see :func:`_augment`).  ``adj[u]`` = multiset dict of
+    right-nodes.  Returns list pairing each left u with a right node, or None
+    if no perfect matching over active nodes."""
+    match_l = [-1] * n
+    match_r = [-1] * n
     for u in range(n):
         if adj[u] and match_l[u] == -1:
-            if not try_kuhn(u, [False] * n):
+            if not _augment(u, adj, match_l, match_r, n):
                 return None
     return match_l
 

@@ -157,7 +157,10 @@ def route_metrics_batched(
     trace's per-epoch weight matrices are evaluated in one batched call —
     on the ``pallas`` backend this is a single launch of the epoch-batched
     ``kernels/linkload`` (and ``kernels/queueloss``) kernels, so loads and
-    queue state stay in VMEM across the sweep.
+    queue state stay in VMEM across the sweep.  Reconfiguration-transition
+    drain stages (:mod:`repro.transition`) ride the same leading batch axis:
+    a stage is just another block with its own residual capacities and
+    re-solved weights.
 
     Args:
       blocks: list of per-epoch ``(T_b, C)`` demand blocks, in trace order

@@ -29,6 +29,13 @@ def _pad_to(x: np.ndarray, axis: int, mult: int) -> np.ndarray:
     return np.pad(x, width)
 
 
+def _shrink_bt(bt: int, t: int) -> int:
+    """Clamp the time-tile to the (8-aligned) block length: transition drain
+    stages and tiny CI sweeps score blocks of a handful of intervals, where a
+    fixed 128-row tile would be almost entirely padding."""
+    return max(8, min(bt, -(-t // 8) * 8))
+
+
 def link_metrics(demand, weights, capacities, threshold: float = 0.8,
                  backend: str = "pallas",
                  bt: int = 128, be: int = 128, bc: int = 128):
@@ -46,6 +53,7 @@ def link_metrics(demand, weights, capacities, threshold: float = 0.8,
 
     t_orig = demand.shape[0]
     if backend == "pallas":
+        bt = _shrink_bt(bt, t_orig)
         d = _pad_to(demand, 0, bt)
         d = _pad_to(d, 1, bc)
         w = _pad_to(weights, 0, bc)
@@ -98,6 +106,7 @@ def link_metrics_batched(demand, weights, capacities, threshold: float = 0.8,
 
     t_orig = demand.shape[1]
     if backend == "pallas":
+        bt = _shrink_bt(bt, t_orig)
         d = _pad_to(_pad_to(demand.astype(np.float32), 1, bt), 2, bc)
         w = _pad_to(_pad_to(weights.astype(np.float32), 1, bc), 2, be)
         ic = _pad_to(inv_cap[:, None, :].astype(np.float32), 2, be)

@@ -30,6 +30,13 @@ def _pad_to(x: np.ndarray, axis: int, mult: int) -> np.ndarray:
     return np.pad(x, width)
 
 
+def _shrink_bt(bt: int, ts: int) -> int:
+    """Clamp the time-tile to the (8-aligned) sub-step count: transition
+    drain stages and tiny CI sweeps scan a handful of sub-steps, where a
+    fixed 128-row tile would be almost entirely padding."""
+    return max(8, min(bt, -(-ts // 8) * 8))
+
+
 def queue_loss(demand, weights, capacities, buffers, dt: float,
                backend: str = "pallas",
                bt: int = 128, be: int = 128, bc: int = 128):
@@ -51,6 +58,7 @@ def queue_loss(demand, weights, capacities, buffers, dt: float,
     buf = np.asarray(buffers, np.float32)
     ts_orig = demand.shape[0]
     if backend == "pallas":
+        bt = _shrink_bt(bt, ts_orig)
         d = _pad_to(demand, 0, bt)
         d = _pad_to(d, 1, bc)
         w = _pad_to(weights, 0, bc)
@@ -96,6 +104,7 @@ def queue_loss_batched(demand, weights, capacities, buffers, dt: float,
     buf = np.asarray(buffers, np.float32)
     ts_orig = demand.shape[1]
     if backend == "pallas":
+        bt = _shrink_bt(bt, ts_orig)
         d = _pad_to(_pad_to(demand, 1, bt), 2, bc)
         w = _pad_to(_pad_to(weights, 1, bc), 2, be)
         cp = _pad_to(cap[:, None, :], 2, be)

@@ -1,0 +1,76 @@
+"""Transition knobs and the §4.6 "when to reconfigure" decision rule.
+
+Kept dependency-free (dataclasses only) so :mod:`repro.core.controller` can
+import the config without pulling the solver-facing transition machinery into
+its import graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["TransitionConfig", "should_reconfigure"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransitionConfig:
+    """Reconfiguration-transition modeling (paper §A / Thm. 4 + §4.6).
+
+    ``ControllerConfig.transition = None`` (the default) is the legacy
+    instantaneous-and-free model — controller output is bit-identical to the
+    pre-transition behavior.  With a config set, every topology update after
+    the first is executed as a sequence of patch-panel drain stages and is
+    gated by :func:`should_reconfigure`.
+
+    Attributes:
+      n_panels: patch panels the fabric's fibers are spread over (Thm. 4's
+        ``2^p``; any positive count is accepted — see
+        :mod:`repro.core.patch_panels` for the generalization).
+      stage_intervals: trace intervals each panel drain occupies.  The first
+        ``n_stages * stage_intervals`` intervals of a topology epoch are
+        scored under the staged residual capacities (clipped to the epoch —
+        stages that do not fit before the next routing update are applied
+        but not scored).
+      decide: gate topology updates on :func:`should_reconfigure`; with
+        ``False`` every update is applied (isolates the staging cost).
+      hysteresis: decision margin — reconfigure only when the predicted
+        benefit exceeds ``(1 + hysteresis) *`` the predicted disruption.
+      instantaneous: model the capacity change as instantaneous (legacy
+        scoring) while still evaluating stages for the decision rule —
+        isolates the decision from the staged-scoring model.
+    """
+
+    n_panels: int = 4
+    stage_intervals: int = 1
+    decide: bool = True
+    hysteresis: float = 0.0
+    instantaneous: bool = False
+
+    def __post_init__(self):
+        if self.n_panels < 1:
+            raise ValueError("n_panels must be >= 1")
+        if self.stage_intervals < 1:
+            raise ValueError("stage_intervals must be >= 1")
+
+
+def should_reconfigure(benefit: float, disruption: float,
+                       hysteresis: float = 0.0) -> bool:
+    """The §4.6 robust decision: apply a topology update iff its predicted
+    steady-state gain beats the transition's predicted disruption.
+
+    Args:
+      benefit: predicted MLU reduction of the new topology over keeping the
+        old one, integrated over the steady intervals until the next topology
+        decision (MLU * intervals; see
+        :meth:`repro.transition.score.TransitionEval`).
+      disruption: predicted worst-stage MLU excess over the old topology,
+        integrated over the transition's staged intervals (same units).
+      hysteresis: extra margin the benefit must clear, as a fraction of the
+        disruption (0 = break even).
+
+    A non-positive benefit never reconfigures; a zero-disruption transition
+    (e.g. no jumper moves) reconfigures whenever the benefit is positive.
+    """
+    if not benefit > 0.0:
+        return False
+    return benefit > (1.0 + hysteresis) * disruption

@@ -87,6 +87,21 @@ def test_pallas_backend_scoring_parity(small_fabric, small_trace):
                                rtol=2e-3, atol=1e-5)
 
 
+@pytest.mark.parametrize("strategy", [Strategy(False, False), Strategy(True, False)])
+def test_engines_agree_on_topology_with_transitions_unset(
+        small_fabric, small_trace, strategy):
+    """With ControllerConfig.transition left at its None default, the new
+    config must be invisible: both engines produce the same topology-update
+    count and bit-identical final topologies, no transition bookkeeping."""
+    seq = _run(small_fabric, small_trace, strategy, engine="sequential")
+    bat = _run(small_fabric, small_trace, strategy, engine="batched")
+    assert bat.n_topology_updates == seq.n_topology_updates
+    np.testing.assert_array_equal(bat.final_topology, seq.final_topology)
+    for res in (seq, bat):
+        assert res.n_skipped_topology == 0
+        assert res.transition_log == ()
+
+
 def test_build_paths_is_cached():
     """build_paths is lru_cached — hot paths must share the PathSet object."""
     assert build_paths(6) is build_paths(6)

@@ -1,0 +1,112 @@
+"""Patch-panel machinery (paper §A, Thm. 4): iterative matching on deep
+augmenting paths, high-degree multigraphs, and per-panel port budgets."""
+
+import numpy as np
+import pytest
+
+from repro.core.graph import trunk_index
+from repro.core.patch_panels import (PanelAssignment, _perfect_matching,
+                                     assign_panels, two_factorize)
+
+
+def test_perfect_matching_deep_augmenting_path():
+    """A chain that forces an augmenting path as long as the graph: node u
+    first tries right node u+1 (taken by u+1's predecessor chain), so the
+    last node's search walks the whole chain.  The recursive DFS blew
+    Python's recursion limit here; the iterative version must not."""
+    n = 3000  # >> default recursion limit
+    adj = [{min(u + 1, n - 1): 1, u: 1} for u in range(n)]
+    m = _perfect_matching(n, adj)
+    assert m is not None
+    assert sorted(m) == list(range(n))  # perfect: every right node used once
+
+
+def test_perfect_matching_none_when_infeasible():
+    # two left nodes competing for one right node
+    adj = [{0: 1}, {0: 1}, {}]
+    assert _perfect_matching(3, adj) is None
+
+
+def test_two_factorize_high_degree_multigraph():
+    """Large-radix (F22-class) regime: a dense high-multiplicity multigraph
+    must decompose into degree-<=2 factors that exactly partition the links."""
+    v = 8
+    rng = np.random.default_rng(7)
+    trunks = trunk_index(v)
+    n_int = 2 * rng.integers(2, 9, size=trunks.shape[0])  # even degrees
+    deg = np.zeros(v, dtype=np.int64)
+    np.add.at(deg, trunks[:, 0], n_int)
+    np.add.at(deg, trunks[:, 1], n_int)
+    factors = two_factorize(v, n_int)
+    assert sum(len(f) for f in factors) == n_int.sum()
+    recount = np.zeros_like(n_int)
+    lut = {(int(i), int(j)): e for e, (i, j) in enumerate(trunks)}
+    for factor in factors:
+        fdeg = np.zeros(v, dtype=np.int64)
+        for i, j in factor:
+            fdeg[i] += 1
+            fdeg[j] += 1
+            recount[lut[(min(i, j), max(i, j))]] += 1
+        assert fdeg.max() <= 2, "a factor must have degree <= 2 everywhere"
+    np.testing.assert_array_equal(recount, n_int)
+
+
+def test_links_per_pod_per_panel_vectorized_matches_loop():
+    edges = [np.asarray([[0, 1], [1, 2], [0, 1]]), np.asarray([[2, 3]]),
+             np.zeros((0, 2), dtype=np.int64)]
+    pa = PanelAssignment(n_panels=3, panel_edges=edges)
+    out = pa.links_per_pod_per_panel(4)
+    expect = np.zeros((3, 4), dtype=np.int64)
+    for p, es in enumerate(edges):
+        for i, j in es:
+            expect[p, i] += 1
+            expect[p, j] += 1
+    np.testing.assert_array_equal(out, expect)
+
+
+def _regular_multigraph(v: int, r: int, seed: int) -> np.ndarray:
+    """2r-regular loopless multigraph on v nodes: union of r random
+    Hamiltonian cycles.  Returns integer trunk counts (E_u,)."""
+    rng = np.random.default_rng(seed)
+    trunks = trunk_index(v)
+    lut = {(int(i), int(j)): e for e, (i, j) in enumerate(trunks)}
+    n_int = np.zeros(trunks.shape[0], dtype=np.int64)
+    for _ in range(r):
+        perm = rng.permutation(v)
+        for a, b in zip(perm, np.roll(perm, -1)):
+            n_int[lut[(min(a, b), max(a, b))]] += 1
+    return n_int
+
+
+def _check_budget(v: int, r: int, n_panels: int, seed: int) -> None:
+    """Thm. 4 generalization: on a 2r-regular even multigraph with
+    ``n_panels | r``, every pod's per-panel port count meets the
+    ``ceil(2 r_v / n_panels)`` budget (exactly ``2r/n_panels`` here)."""
+    n_int = _regular_multigraph(v, r, seed)
+    pa = assign_panels(v, n_int, n_panels)
+    ports = pa.links_per_pod_per_panel(v)
+    budget = int(np.ceil(2 * r / n_panels))
+    assert ports.max() <= budget
+    assert ports.sum() == 2 * n_int.sum()  # every link endpoint accounted
+
+
+@pytest.mark.parametrize("v,r,n_panels,seed", [
+    (3, 2, 2, 0), (5, 4, 4, 1), (6, 6, 3, 2), (8, 8, 4, 3), (9, 12, 4, 4),
+    (12, 32, 4, 5),  # fleet-scale: radix-64 pod degrees over 4 panels
+])
+def test_panel_port_budget_regular_cases(v, r, n_panels, seed):
+    _check_budget(v, r, n_panels, seed)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(3, 9), st.integers(1, 4), st.integers(1, 3),
+           st.integers(0, 10_000))
+    def test_panel_port_budget_regular_property(v, r_over_p, n_panels, seed):
+        _check_budget(v, r_over_p * n_panels, n_panels, seed)
+except ImportError:  # pragma: no cover - property variant needs hypothesis
+    def test_panel_port_budget_regular_property():
+        pytest.skip("property tests need hypothesis")
