@@ -117,13 +117,16 @@ def run(force: bool = False, scale: str | None = None) -> dict:
     scale = scale or SCALE
     if scale == "tiny":  # CI smoke: always fresh, never cached
         return _run("tiny")
-    return cached("engine", lambda: _run(scale), force)
+    return cached("engine", lambda: _run(scale), force, params=DEFAULT_PARAMS)
 
 
 def main() -> None:
     import argparse
     import json
     import pathlib
+    import time as _time
+
+    from benchmarks.common import calibrate
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true",
@@ -132,7 +135,11 @@ def main() -> None:
     ap.add_argument("--json", type=str, default=None,
                     help="also write the result to this JSON file")
     args = ap.parse_args()
+    t0 = _time.time()
     out = run(force=args.force, scale="tiny" if args.tiny else None)
+    # wall-time + machine-speed stamps for the CI regression gate
+    out["_wall_s"] = round(_time.time() - t0, 2)
+    out["_calibration_s"] = round(calibrate(), 4)
     print(json.dumps(out["aggregate"], indent=2))
     for r in out["rows"]:
         print(f"{r['fabric']} (V={r['pods']}, B={r['routing_epochs']}): "

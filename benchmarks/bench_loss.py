@@ -116,7 +116,7 @@ def run(force: bool = False, scale: str | None = None) -> dict:
     scale = scale or SCALE
     if scale == "tiny":  # CI smoke: always fresh, never cached
         return _run("tiny")
-    return cached("loss", lambda: _run(scale), force)
+    return cached("loss", lambda: _run(scale), force, params=_params(scale))
 
 
 def main() -> None:

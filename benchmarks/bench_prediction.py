@@ -1,10 +1,19 @@
-"""Prediction-quality bench: paper Figs. 22 / 23 / 24.
+"""Prediction-quality bench: paper Figs. 22 / 23 / 24 — on the fleet engine.
 
 Rolling windows: for each fabric and each (train-window → test-window) pair,
 the Predictor's choice is compared against the hindsight-optimal strategy
 (the one that actually minimizes the operator objective on the test window).
 Reports accuracy (Fig. 22), benefit of correct predictions (Fig. 23), and
 misprediction cost (Fig. 24).
+
+Every sweep behind both sides of the comparison — all strategies on all
+training windows (the Predictor) and all strategies on all test windows (the
+hindsight oracle) — runs through :func:`repro.core.fleet_engine.run_fleet`
+as fleet-wide PDHG batches.  Pass ``--sequential`` to re-run the study on the
+per-fabric loop (the parity reference; bench_fleet gates on it).
+
+    PYTHONPATH=src python -m benchmarks.bench_prediction          # default
+    PYTHONPATH=src python -m benchmarks.bench_prediction --tiny   # CI smoke
 """
 
 from __future__ import annotations
@@ -15,28 +24,51 @@ from benchmarks.common import FLEET_PARAMS, SCALE, cached
 from repro.core import (STRATEGIES, ControllerConfig, SolverConfig, pick_best,
                         predict, run_controller)
 from repro.core.fleet import make_fleet
+from repro.core.fleet_engine import FleetJob, predict_fleet, run_fleet
 
 
-def _run():
-    p = FLEET_PARAMS[SCALE]
+def _params(scale: str) -> dict:
+    p = dict(FLEET_PARAMS[scale])
+    p["n_fabrics"] = (p["n_fabrics"] if scale == "tiny"
+                      else max(4, p["n_fabrics"] // 2))
+    return p
+
+
+def _run(scale: str, sequential: bool = False) -> dict:
+    p = _params(scale)
     cc = ControllerConfig(routing_interval_hours=p["routing_interval_hours"],
                           topology_interval_days=p["topology_interval_days"],
                           aggregation_days=p["aggregation_days"],
-                          k_critical=p["k_critical"])
+                          k_critical=p["k_critical"],
+                          solver_backend="scipy" if sequential else "pdhg")
     sc = SolverConfig(stage1_method="scaled")
     win = p["days"] / 2
+    fleet = [(spec, fabric, trace.slice_days(0, win),
+              trace.slice_days(win, win))
+             for spec, fabric, trace in make_fleet(
+                 days=p["days"], interval_minutes=p["interval_minutes"],
+                 n_fabrics=p["n_fabrics"])]
+
+    if sequential:  # per-fabric reference loop (legacy path)
+        preds = [predict(fabric, train, cc, sc)
+                 for _, fabric, train, _ in fleet]
+        hindsight = [{strat.name: run_controller(fabric, test, strat, cc,
+                                                 sc).summary
+                      for strat in STRATEGIES}
+                     for _, fabric, _, test in fleet]
+    else:  # fleet-batched: one predict_fleet + one hindsight run_fleet
+        preds = predict_fleet([(fabric, train)
+                               for _, fabric, train, _ in fleet], cc, sc)
+        res = run_fleet([FleetJob(fabric, test, strat, cc, sc)
+                         for _, fabric, _, test in fleet
+                         for strat in STRATEGIES])
+        k = len(STRATEGIES)
+        hindsight = [{STRATEGIES[si].name: res[fi * k + si].summary
+                      for si in range(k)} for fi in range(len(fleet))]
+
     rows = []
-    for spec, fabric, trace in make_fleet(days=p["days"],
-                                          interval_minutes=p["interval_minutes"],
-                                          n_fabrics=max(4, p["n_fabrics"] // 2)):
-        train = trace.slice_days(0, win)
-        test = trace.slice_days(win, win)
-        pred = predict(fabric, train, cc, sc)
-        # hindsight: run every strategy on the test window
-        per_test = {}
-        for strat in STRATEGIES:
-            res = run_controller(fabric, test, strat, cc, sc)
-            per_test[strat.name] = res.summary
+    for (spec, fabric, train, test), pred, per_test in zip(fleet, preds,
+                                                           hindsight):
         optimal = pick_best(per_test, cushion=0.05)
         chosen = pred.strategy.name
         rows.append({
@@ -53,6 +85,7 @@ def _run():
     correct = [r for r in rows if r["correct"]]
     wrong = [r for r in rows if not r["correct"]]
     agg = {
+        "scale": scale,
         "accuracy": len(correct) / max(len(rows), 1),
         # Fig. 23: benefit — chosen vs the WORST strategy (range of improvement)
         "mean_benefit_vs_worst": float(np.mean(
@@ -66,11 +99,42 @@ def _run():
     return {"rows": rows, "aggregate": agg}
 
 
-def run(force: bool = False):
-    return cached("prediction", _run, force)
+def run(force: bool = False, scale: str | None = None,
+        sequential: bool = False) -> dict:
+    scale = scale or SCALE
+    if scale == "tiny":  # CI smoke: always fresh, never cached
+        return _run("tiny", sequential)
+    name = "prediction_seq" if sequential else "prediction"
+    return cached(name, lambda: _run(scale, sequential), force,
+                  params=_params(scale))
+
+
+def main() -> None:
+    import argparse
+    import json
+    import pathlib
+
+    from benchmarks.common import calibrate
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small fleet, coarse cadence")
+    ap.add_argument("--force", action="store_true", help="ignore cached results")
+    ap.add_argument("--sequential", action="store_true",
+                    help="per-fabric reference loop instead of the fleet engine")
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write the result to this JSON file")
+    args = ap.parse_args()
+    out = run(force=args.force, scale="tiny" if args.tiny else None,
+              sequential=args.sequential)
+    out["_calibration_s"] = round(calibrate(), 4)
+    print(json.dumps(out["aggregate"], indent=2))
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps(out, indent=2))
+    # structural smoke gates (the fleet is deterministic at every scale)
+    assert out["rows"], "prediction bench produced no rows"
+    assert 0.0 <= out["aggregate"]["accuracy"] <= 1.0
 
 
 if __name__ == "__main__":
-    import json
-
-    print(json.dumps(run()["aggregate"], indent=2))
+    main()

@@ -71,7 +71,7 @@ def _run():
 
 
 def run(force: bool = False):
-    return cached("sensitivity", _run, force)
+    return cached("sensitivity", _run, force, params=FLEET_PARAMS[SCALE])
 
 
 if __name__ == "__main__":

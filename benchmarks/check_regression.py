@@ -1,0 +1,213 @@
+"""CI perf-trajectory gate: compare fresh bench JSONs against committed
+baselines and fail on wall-time or quality regressions.
+
+CI uploaded ``BENCH_*.json`` artifacts for several PRs without ever comparing
+them to anything — a perf regression shipped silently.  This gate closes the
+loop: ``--tiny`` baselines live under ``benchmarks/results/baselines/``
+(committed), and every CI run checks its fresh results against them.
+
+Rules per metric kind:
+  * **time** — fail when ``fresh > max_slowdown × baseline`` (default 1.25,
+    i.e. >25% slower), after normalizing by the machine-speed calibration the
+    benches stamp into ``_calibration_s`` (so a slower CI runner generation
+    does not trip the gate, and a faster one does not mask a regression).
+    Sub-second baselines keep a small absolute floor — timer noise on a 0.1 s
+    step is not a regression signal.
+  * **lower** — quality metrics where bigger is worse (e.g. solver-parity
+    deltas): fail when ``fresh > baseline + tol``.
+  * **higher** — quality metrics where smaller is worse (e.g. skip counts,
+    feasibility fractions): fail when ``fresh < baseline − tol``.
+
+Refresh baselines after an intentional perf change with ``--update`` (run the
+``--tiny`` benches first), and verify the gate itself with ``--self-test``:
+it replays each baseline against itself (must pass), against a 2× wall-time
+copy (must fail), and against a quality-regressed copy (must fail).
+
+    python -m benchmarks.check_regression BENCH_engine.json \
+        BENCH_transition.json BENCH_fleet.json
+    python -m benchmarks.check_regression --self-test
+    python -m benchmarks.check_regression --update BENCH_*.json
+"""
+
+from __future__ import annotations
+
+import copy
+import json
+import pathlib
+import sys
+
+BASELINE_DIR = pathlib.Path(__file__).resolve().parent / "results" / "baselines"
+
+# metric spec per bench artifact: dotted paths into the result JSON
+SPECS = {
+    "BENCH_engine.json": {
+        "time": ["aggregate.batched_pdhg_warm_total_s",
+                 "aggregate.batched_pdhg_cold_total_s"],
+        # PDHG-vs-scipy summary drift is solver quality — must not grow
+        "lower": [("aggregate.max_p999_rel_delta.p999_mlu", 0.02),
+                  ("aggregate.max_p999_rel_delta.p999_alu", 0.02)],
+        "higher": [],
+    },
+    "BENCH_transition.json": {
+        "time": ["_wall_s"],
+        "lower": [],
+        # deterministic behavioral gates of the transition subsystem
+        "higher": [("aggregate.n_transitions", 0),
+                   ("aggregate.n_schedule_strictly_better", 0),
+                   ("aggregate.n_skipped", 0),
+                   ("aggregate.max_worst_stage_excess", 1e-9)],
+    },
+    "BENCH_fleet.json": {
+        "time": ["aggregate.fleet_warm_s", "aggregate.figures_s", "_wall_s"],
+        "lower": [("aggregate.max_parity_rel_delta", 1e-4)],
+        "higher": [("aggregate.mlu_improvement_vs_vlb", 0.02),
+                   ("aggregate.frac_gemini_feasible", 0.0)],
+    },
+}
+
+TIME_ABS_FLOOR_S = 1.0  # ignore sub-second jitter on tiny steps
+
+
+def _get(d: dict, dotted: str):
+    for part in dotted.split("."):
+        d = d[part]
+    return d
+
+
+def _cal_scale(fresh: dict, base: dict) -> float:
+    """Machine-speed ratio fresh/baseline, clamped — a 3× slower runner is
+    treated as 3× slower hardware, anything beyond that is suspicious enough
+    to surface as a failure rather than normalize away."""
+    f, b = fresh.get("_calibration_s"), base.get("_calibration_s")
+    if not f or not b:
+        return 1.0
+    return min(max(f / b, 1.0 / 3.0), 3.0)
+
+
+def check(name: str, fresh: dict, base: dict,
+          max_slowdown: float = 1.25) -> list:
+    """Return a list of human-readable failure strings (empty = pass)."""
+    spec = SPECS[name]
+    scale = _cal_scale(fresh, base)
+    failures = []
+    for path in spec["time"]:
+        try:
+            f, b = float(_get(fresh, path)), float(_get(base, path))
+        except KeyError:
+            failures.append(f"{name}: missing time metric {path}")
+            continue
+        budget = max(b * scale * max_slowdown, TIME_ABS_FLOOR_S)
+        if f > budget:
+            failures.append(
+                f"{name}: {path} = {f:.2f}s exceeds budget {budget:.2f}s "
+                f"(baseline {b:.2f}s × cal {scale:.2f} × {max_slowdown})")
+    for path, tol in spec["lower"]:
+        try:
+            f, b = float(_get(fresh, path)), float(_get(base, path))
+        except KeyError:
+            failures.append(f"{name}: missing quality metric {path}")
+            continue
+        if f > b + tol:
+            failures.append(
+                f"{name}: {path} regressed {b:.6g} → {f:.6g} (tol +{tol})")
+    for path, tol in spec["higher"]:
+        try:
+            f, b = float(_get(fresh, path)), float(_get(base, path))
+        except KeyError:
+            failures.append(f"{name}: missing quality metric {path}")
+            continue
+        if f < b - tol:
+            failures.append(
+                f"{name}: {path} regressed {b:.6g} → {f:.6g} (tol −{tol})")
+    return failures
+
+
+def _self_test(baseline_dir: pathlib.Path, max_slowdown: float) -> int:
+    """Prove the gate bites: identity passes, 2× wall-time fails, quality
+    regression fails — for every committed baseline."""
+    ok = True
+    names = sorted(p.name for p in baseline_dir.glob("BENCH_*.json"))
+    if not names:
+        print(f"self-test: no baselines under {baseline_dir}")
+        return 1
+    for name in names:
+        base = json.loads((baseline_dir / name).read_text())
+        if check(name, base, base, max_slowdown):
+            print(f"self-test FAIL: {name} does not pass against itself")
+            ok = False
+        slow = copy.deepcopy(base)
+        for path in SPECS[name]["time"]:
+            parent, leaf = path.rpartition(".")[::2]
+            node = _get(slow, parent) if parent else slow
+            node[leaf] = float(node[leaf]) * 2.0 + 2 * TIME_ABS_FLOOR_S
+        if not check(name, slow, base, max_slowdown):
+            print(f"self-test FAIL: {name} accepts a 2x wall-time regression")
+            ok = False
+        bad = copy.deepcopy(base)
+        degraded = False
+        for path, tol in SPECS[name]["lower"]:
+            parent, leaf = path.rpartition(".")[::2]
+            node = _get(bad, parent) if parent else bad
+            node[leaf] = float(node[leaf]) + 10.0 * max(tol, 1e-3)
+            degraded = True
+        for path, tol in SPECS[name]["higher"]:
+            parent, leaf = path.rpartition(".")[::2]
+            node = _get(bad, parent) if parent else bad
+            node[leaf] = float(node[leaf]) - 10.0 * max(tol, 1e-3) - 1.0
+            degraded = True
+        if degraded and not check(name, bad, base, max_slowdown):
+            print(f"self-test FAIL: {name} accepts a quality regression")
+            ok = False
+        print(f"self-test ok: {name}")
+    return 0 if ok else 1
+
+
+def main() -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", nargs="*",
+                    help="fresh BENCH_*.json files (baseline matched by name)")
+    ap.add_argument("--baseline-dir", type=pathlib.Path, default=BASELINE_DIR)
+    ap.add_argument("--max-slowdown", type=float, default=1.25,
+                    help="wall-time budget multiplier (default: fail >25%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the fresh files over the baselines instead of "
+                         "checking (after an intentional perf change)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate fails on injected regressions")
+    args = ap.parse_args()
+
+    if args.self_test:
+        return _self_test(args.baseline_dir, args.max_slowdown)
+    if not args.fresh:
+        ap.error("no fresh bench files given (or use --self-test)")
+    failures = []
+    for fresh_path in map(pathlib.Path, args.fresh):
+        name = fresh_path.name
+        if name not in SPECS:
+            failures.append(f"{name}: no regression spec registered")
+            continue
+        if args.update:
+            args.baseline_dir.mkdir(parents=True, exist_ok=True)
+            (args.baseline_dir / name).write_text(fresh_path.read_text())
+            print(f"updated baseline {name}")
+            continue
+        base_path = args.baseline_dir / name
+        if not base_path.exists():
+            failures.append(f"{name}: no committed baseline at {base_path}")
+            continue
+        fresh = json.loads(fresh_path.read_text())
+        base = json.loads(base_path.read_text())
+        fails = check(name, fresh, base, args.max_slowdown)
+        failures.extend(fails)
+        if not fails:
+            print(f"ok: {name} within budget "
+                  f"(cal scale {_cal_scale(fresh, base):.2f})")
+    for f in failures:
+        print(f"REGRESSION: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

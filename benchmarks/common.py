@@ -1,4 +1,4 @@
-"""Shared bench plumbing: scales, result caching, CSV emission."""
+"""Shared bench plumbing: scales, result caching, CSV emission, calibration."""
 
 from __future__ import annotations
 
@@ -6,6 +6,7 @@ import json
 import os
 import pathlib
 import time
+import zlib
 
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 RESULTS.mkdir(parents=True, exist_ok=True)
@@ -15,10 +16,13 @@ SCALE = os.environ.get("REPRO_BENCH_SCALE", "smoke")
 
 # bump to invalidate every cached result when generation changes semantically
 # (v2: process-stable fleet seeding — pre-v2 caches came from salted-hash
-# fleets and must not be mixed with fresh runs)
-CACHE_VERSION = 2
+# fleets and must not be mixed with fresh runs; v3: param-keyed cache files)
+CACHE_VERSION = 3
 
 FLEET_PARAMS = {
+    "tiny": dict(n_fabrics=3, days=6.0, interval_minutes=120.0,
+                 routing_interval_hours=6.0, topology_interval_days=2.0,
+                 aggregation_days=2.0, k_critical=4),
     "smoke": dict(n_fabrics=6, days=10.0, interval_minutes=60.0,
                   routing_interval_hours=6.0, topology_interval_days=2.0,
                   aggregation_days=2.0, k_critical=6),
@@ -28,8 +32,27 @@ FLEET_PARAMS = {
 }
 
 
-def cached(name: str, fn, force: bool = False):
-    path = RESULTS / f"{name}__{SCALE}__v{CACHE_VERSION}.json"
+def params_key(params) -> str:
+    """Short stable digest of a bench's parameter dict.
+
+    Cache files are keyed on it so editing a scale's parameters (or switching
+    ``REPRO_BENCH_SCALE`` between runs that share a name) can never serve a
+    stale result generated under different settings.
+    """
+    blob = json.dumps(params, sort_keys=True, default=repr)
+    return f"{zlib.crc32(blob.encode()):08x}"
+
+
+def cached(name: str, fn, force: bool = False, params=None):
+    """Memoize ``fn()``'s JSON result on disk.
+
+    ``params`` must carry every input that affects the result (fleet/config
+    parameters); it becomes part of the cache filename via :func:`params_key`.
+    Omitting it keys on the scale name alone (legacy behavior — only safe for
+    benches whose output depends on nothing but ``SCALE``).
+    """
+    suffix = f"__{params_key(params)}" if params is not None else ""
+    path = RESULTS / f"{name}__{SCALE}__v{CACHE_VERSION}{suffix}.json"
     if path.exists() and not force:
         return json.loads(path.read_text())
     t0 = time.time()
@@ -37,6 +60,25 @@ def cached(name: str, fn, force: bool = False):
     out["_elapsed_s"] = round(time.time() - t0, 1)
     path.write_text(json.dumps(out, indent=2))
     return out
+
+
+def calibrate(n: int = 384, reps: int = 6) -> float:
+    """Machine-speed probe: seconds for a fixed numpy matmul workload.
+
+    Benches stamp this into their JSON (``_calibration_s``) so the CI
+    perf-trajectory gate (:mod:`benchmarks.check_regression`) can normalize
+    wall-times across runner generations instead of comparing raw seconds
+    from different machines.
+    """
+    import numpy as np
+
+    a = np.ones((n, n)) * 0.5
+    b = np.ones((n, n)) * 0.25
+    a @ b  # warm-up (thread-pool spin-up etc.)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        a = a @ b * 1e-2
+    return time.perf_counter() - t0
 
 
 def emit(name: str, us_per_call: float, derived: str):

@@ -20,9 +20,10 @@ the mapping to the paper's §3/§5 figures.
 
 from repro.burst.expander import BurstParams, expand, from_fleet_spec
 from repro.burst.queue import (LossConfig, interval_loss, interval_loss_batched,
-                               link_buffer_gb)
+                               interval_loss_fleet, link_buffer_gb)
 
 __all__ = [
     "BurstParams", "expand", "from_fleet_spec",
-    "LossConfig", "interval_loss", "interval_loss_batched", "link_buffer_gb",
+    "LossConfig", "interval_loss", "interval_loss_batched",
+    "interval_loss_fleet", "link_buffer_gb",
 ]

@@ -46,7 +46,7 @@ import numpy as np
 from repro.burst.expander import BurstParams, expand
 
 __all__ = ["LossConfig", "link_buffer_gb", "interval_loss",
-           "interval_loss_batched", "queue_loss_numpy"]
+           "interval_loss_batched", "interval_loss_fleet", "queue_loss_numpy"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,3 +187,81 @@ def interval_loss_batched(
                                          backend=backend)
     return [_loss_fractions(drop_b[i, : n * cfg.n_sub], s, n, cfg.n_sub, dt)
             for i, (s, n) in enumerate(zip(subs, lens))]
+
+
+def interval_loss_fleet(
+    blocks_fleet: list,
+    weights_fleet: list,
+    capacities_fleet: list,
+    interval_seconds: float,
+    cfg: LossConfig,
+    seeds_fleet: list,
+    backend: str = "numpy",
+    slots_fleet: list | None = None,
+) -> list:
+    """Fleet-fused :func:`interval_loss_batched` over many fabrics' sweeps.
+
+    Args:
+      blocks_fleet: per-fabric lists of ``(T_b, C)`` demand blocks in each
+        fabric's **native** commodity layout — burst expansion is
+        deterministic per (seed, block shape), so expanding a padded block
+        would draw different bursts than the sequential controller and break
+        the paired-seed contract.
+      weights_fleet: per-fabric ``(B_f, C_p, E_p)`` routing-weight stacks in
+        the (possibly padded) bucket layout.
+      capacities_fleet: per-fabric ``(B_f, E_p)`` capacities, same layout.
+      seeds_fleet: per-fabric lists of per-block burst seeds (must match the
+        sequential controller's ``cfg.seed + start`` for paired comparisons).
+      slots_fleet: per-fabric commodity-slot embeddings
+        (:func:`repro.core.fleet.commodity_slots`) into the bucket layout
+        (whose width comes from ``weights_fleet``); ``None`` when the blocks
+        already match the weights.
+
+    Burst expansion stays per-block, per-seed, and native-layout
+    (bit-identical to the sequential controller); the expanded sub-samples
+    are then scattered into the bucket layout and the queue scan runs as one
+    fabric-batched call (:func:`repro.kernels.queueloss.ops.queue_loss_fleet`)
+    — a (F, B, TS, C_p) launch whose padded commodities carry zero demand
+    against zero capacity and can never drop.  Returns per-fabric lists of
+    ``(T_b,)`` loss fractions.
+    """
+    f = len(blocks_fleet)
+    if f == 0:
+        return []
+    dt = interval_seconds / cfg.n_sub
+    subs, lens = [], []
+    for blocks, seeds in zip(blocks_fleet, seeds_fleet):
+        row_subs, row_lens = [], []
+        for block, seed in zip(blocks, seeds):
+            block = np.asarray(block, np.float64)
+            row_lens.append(block.shape[0])
+            row_subs.append(expand(block, cfg.n_sub, cfg.burst, seed))
+        subs.append(row_subs)
+        lens.append(row_lens)
+    b_max = max(len(row) for row in subs)
+    ts_max = max((n for row in lens for n in row), default=1) * cfg.n_sub
+    c = weights_fleet[0].shape[1]
+    e = weights_fleet[0].shape[2]
+    sub_b = np.zeros((f, b_max, max(ts_max, 1), c), np.float64)
+    w_b = np.zeros((f, b_max, c, e), np.float64)
+    cap_b = np.zeros((f, b_max, e), np.float64)
+    buf_b = np.zeros((f, b_max, e), np.float64)
+    for fi in range(f):
+        slots = None if slots_fleet is None else slots_fleet[fi]
+        for bi, s in enumerate(subs[fi]):
+            if slots is None:
+                sub_b[fi, bi, : s.shape[0]] = s
+            else:  # embed the native-layout expansion into the bucket layout
+                sub_b[fi, bi, : s.shape[0], :][:, slots] = s
+        nb = len(subs[fi])
+        w_b[fi, :nb] = np.asarray(weights_fleet[fi], np.float64)
+        cap_b[fi, :nb] = np.asarray(capacities_fleet[fi], np.float64)
+        buf_b[fi, :nb] = link_buffer_gb(cap_b[fi, :nb], cfg.buffer_ms)
+    from repro.kernels.queueloss import ops as qlops
+
+    drop_b, _ = qlops.queue_loss_fleet(sub_b, w_b, cap_b, buf_b, dt,
+                                       backend=backend)
+    return [[_loss_fractions(drop_b[fi, bi, : n * cfg.n_sub], s, n, cfg.n_sub,
+                             dt)
+             for bi, (s, n) in enumerate(zip(subs[fi], lens[fi]))]
+            for fi in range(f)]

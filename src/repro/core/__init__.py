@@ -11,7 +11,9 @@ from repro.core.clustering import critical_tms
 from repro.core.solver import STRATEGIES, GeminiSolution, SolverConfig, Strategy, solve
 from repro.core.simulator import IntervalMetrics, route_metrics, summarize
 from repro.core.controller import ControllerConfig, ControllerResult, run_controller
-from repro.core.engine import ControllerPlan, plan_controller, run_controller_batched
+from repro.core.engine import (ControllerPlan, PlanArtifacts, plan_artifacts,
+                               plan_controller, run_controller_batched)
+from repro.core.fleet_engine import FleetJob, predict_fleet, run_fleet
 from repro.core.predictor import Prediction, pick_best, predict
 from repro.burst import BurstParams, LossConfig
 from repro.transition import TransitionConfig, should_reconfigure
@@ -21,7 +23,8 @@ __all__ = [
     "routing_weight_matrix", "Trace", "critical_tms", "STRATEGIES",
     "GeminiSolution", "SolverConfig", "Strategy", "solve", "IntervalMetrics",
     "route_metrics", "summarize", "ControllerConfig", "ControllerResult",
-    "run_controller", "ControllerPlan", "plan_controller",
-    "run_controller_batched", "Prediction", "pick_best", "predict",
+    "run_controller", "ControllerPlan", "PlanArtifacts", "plan_artifacts",
+    "plan_controller", "run_controller_batched", "FleetJob", "run_fleet",
+    "predict_fleet", "Prediction", "pick_best", "predict",
     "BurstParams", "LossConfig", "TransitionConfig", "should_reconfigure",
 ]

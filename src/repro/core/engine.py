@@ -47,7 +47,8 @@ from repro.core.simulator import route_metrics_batched, summarize
 from repro.core.solver import GeminiSolution, SolverConfig, Strategy, solve
 from repro.core.traffic import Trace
 
-__all__ = ["EpochPlan", "ControllerPlan", "plan_controller",
+__all__ = ["EpochPlan", "ControllerPlan", "PlanArtifacts", "plan_controller",
+           "plan_artifacts", "plan_score_blocks", "execute_plan",
            "run_controller_batched", "routing_solver_for"]
 
 
@@ -160,31 +161,43 @@ def _solve_routing_scipy(fabric, tms, sc, capacities, delta):
     return f, u_star, r_star
 
 
-def run_controller_batched(
-    fabric: Fabric,
-    trace: Trace,
-    strategy: Strategy,
-    cc=None,
-    sc: SolverConfig | None = None,
-):
-    """Plan → batch-execute equivalent of ``run_controller``.
+@dataclasses.dataclass
+class PlanArtifacts:
+    """Stackable output of the controller's plan walk (phase 1).
 
-    Returns a ``ControllerResult`` with the same fields and semantics as the
-    sequential walk; see the module docstring for the parity contract.
+    One instance describes everything a sweep's routing-only solves and
+    scoring need — per-epoch critical TMs, burst sizes, realized capacities,
+    staged transitions — plus the topology-update bookkeeping the final
+    :class:`~repro.core.controller.ControllerResult` reports.  The arrays are
+    deliberately rectangular (``caps`` is ``(B, E)``, :meth:`tms_padded`
+    yields ``(B, m, C)``) so the fleet engine
+    (:mod:`repro.core.fleet_engine`) can pad and stack artifacts from many
+    fabrics onto one leading batch axis.
     """
-    from repro.core.controller import ControllerConfig, ControllerResult
 
-    cc = cc or ControllerConfig()
-    sc = sc or SolverConfig()
-    if cc.transition is not None and not cc.realize_topology:
-        # panel decomposition (Thm. 4) needs integer, even-degree topologies
-        raise ValueError("ControllerConfig.transition requires realize_topology")
+    plan: ControllerPlan
+    tms: tuple  # per-epoch (m_i, C) critical TMs (unpadded — scipy path)
+    deltas: np.ndarray  # (B,) burst sizes (0 without hedging)
+    caps: np.ndarray  # (B, E) realized directed capacities per epoch
+    staging: tuple  # per-epoch TransitionEval | None (drain-staged epochs)
+    n_topology: int
+    n_skipped: int
+    transition_log: tuple
+    n_realized: np.ndarray  # final realized topology (trunk counts)
+    solver_seconds: float  # topology-solve + transition-eval wall clock
+
+    def tms_padded(self, k: int) -> np.ndarray:
+        """Critical TMs zero-padded to the static ``k`` rows, stacked (B, m, C)."""
+        return np.stack([_pad_tms(t, k) for t in self.tms])
+
+
+def plan_artifacts(fabric: Fabric, trace: Trace, strategy: Strategy,
+                   cc, sc: SolverConfig) -> PlanArtifacts:
+    """Phase 1: walk the trace computing windows, critical TMs, and topology
+    epochs (joint topology solves run sequentially through scipy/HiGHS —
+    the rare, daily events)."""
     plan = plan_controller(trace, cc, strategy.nonuniform)
-    paths = build_paths(fabric.n_pods)
-    fixed = Strategy(nonuniform=False, hedging=strategy.hedging)
     solver_s = 0.0
-
-    # ---- phase 1: plan walk — windows, critical TMs, topology epochs --------
     tc = cc.transition
     tms_list, deltas, caps_list, staging = [], [], [], []
     n_topology, n_skipped, transition_log = 0, 0, []
@@ -228,39 +241,36 @@ def run_controller_batched(
         deltas.append(delta)
         caps_list.append(cap)
         staging.append(staged)
-    caps = np.stack(caps_list)
+    return PlanArtifacts(
+        plan=plan, tms=tuple(tms_list), deltas=np.asarray(deltas),
+        caps=np.stack(caps_list), staging=tuple(staging),
+        n_topology=n_topology, n_skipped=n_skipped,
+        transition_log=tuple(transition_log),
+        n_realized=np.asarray(n_realized), solver_seconds=solver_s)
 
-    # ---- phase 2: batched routing-only solves -------------------------------
-    t0 = time.perf_counter()
-    if cc.solver_backend == "pdhg":
-        solver = routing_solver_for(fabric, cc.k_critical,
-                                    cc.pdhg_max_iters, cc.pdhg_tol)
-        tms_b = np.stack([_pad_tms(t, cc.k_critical) for t in tms_list])
-        out = solver.solve_routing_batch(
-            tms_b, caps, hedging=fixed.hedging,
-            deltas=np.asarray(deltas), skip_stage3=sc.skip_stage3)
-        f_b = out["f"]
-    elif cc.solver_backend == "scipy":
-        f_b = np.stack([
-            _solve_routing_scipy(fabric, tms, sc, c, d)[0]
-            for tms, c, d in zip(tms_list, caps_list, deltas)])
-    else:
-        raise ValueError(f"unknown solver_backend {cc.solver_backend!r}")
-    solver_s += time.perf_counter() - t0
 
-    # ---- phase 3: single-pass batched scoring -------------------------------
-    # Drain stages slot in as extra blocks on the same leading batch axis, so
-    # a transition-heavy sweep still scores in one epoch-batched kernel call.
-    w_b = routing_weight_matrices(paths, f_b)
+def plan_score_blocks(trace: Trace, art: PlanArtifacts, w_b: np.ndarray,
+                      caps: np.ndarray, cc):
+    """Assemble one sweep's scoring blocks in trace order.
+
+    Drain stages slot in as extra blocks on the same leading batch axis, so a
+    transition-heavy sweep still scores in one epoch-batched kernel call.
+    ``w_b``/``caps`` may live in a padded commodity layout (fleet engine) —
+    staged epochs' ``stage_w``/``stage_caps`` are taken from ``art.staging``
+    as-is, so callers in a padded layout must pad those too.
+
+    Returns ``(blocks, block_w, block_caps, loss_seeds)``; ``blocks`` are
+    (T_b, C) demand slices of ``trace``.
+    """
     blocks, block_w, block_caps, loss_seeds = [], [], [], []
-    for i, ep in enumerate(plan.epochs):
+    for i, ep in enumerate(art.plan.epochs):
         block = trace.demand[ep.start: ep.stop]
         rem_lo, rem_seed = 0, (cc.loss.seed + ep.start
                                if cc.loss is not None else None)
-        if staging[i] is not None:
+        if art.staging[i] is not None:
             from repro.transition import stage_partition
 
-            ev = staging[i]
+            ev = art.staging[i]
             spans, seeds, rem_lo, rem_seed = stage_partition(
                 ev, block.shape[0], ep.start,
                 cc.loss.seed if cc.loss is not None else None)
@@ -274,25 +284,86 @@ def run_controller_batched(
             block_w.append(w_b[i])
             block_caps.append(caps[i])
             loss_seeds.append(rem_seed if rem_seed is not None else 0)
+    return blocks, block_w, block_caps, loss_seeds
+
+
+def transit_fraction_of(paths, f_b: np.ndarray) -> float:
+    """Mean (over epochs) fraction of split mass on 2-hop transit paths."""
+    two = paths.path_n_edges == 2
+    return float(np.mean(
+        f_b[:, two].sum(axis=1) / np.maximum(f_b.sum(axis=1), 1e-12)))
+
+
+def execute_plan(fabric: Fabric, trace: Trace, strategy: Strategy,
+                 cc, sc: SolverConfig, art: PlanArtifacts):
+    """Phases 2–3: batched routing-only solves + single-pass batched scoring
+    for one planned sweep."""
+    from repro.core.controller import ControllerResult
+
+    paths = build_paths(fabric.n_pods)
+    fixed = Strategy(nonuniform=False, hedging=strategy.hedging)
+    caps = art.caps
+    solver_s = art.solver_seconds
+
+    # ---- phase 2: batched routing-only solves -------------------------------
+    t0 = time.perf_counter()
+    if cc.solver_backend == "pdhg":
+        solver = routing_solver_for(fabric, cc.k_critical,
+                                    cc.pdhg_max_iters, cc.pdhg_tol)
+        out = solver.solve_routing_batch(
+            art.tms_padded(cc.k_critical), caps, hedging=fixed.hedging,
+            deltas=art.deltas, skip_stage3=sc.skip_stage3)
+        f_b = out["f"]
+    elif cc.solver_backend == "scipy":
+        f_b = np.stack([
+            _solve_routing_scipy(fabric, tms, sc, c, d)[0]
+            for tms, c, d in zip(art.tms, caps, art.deltas)])
+    else:
+        raise ValueError(f"unknown solver_backend {cc.solver_backend!r}")
+    solver_s += time.perf_counter() - t0
+
+    # ---- phase 3: single-pass batched scoring -------------------------------
+    w_b = routing_weight_matrices(paths, f_b)
+    blocks, block_w, block_caps, loss_seeds = plan_score_blocks(
+        trace, art, w_b, caps, cc)
     metrics = route_metrics_batched(
         blocks, np.stack(block_w), np.stack(block_caps), cc.overload_threshold,
         backend=cc.backend, loss_cfg=cc.loss,
         loss_seeds=loss_seeds if cc.loss is not None else None,
         interval_seconds=trace.interval_minutes * 60.0)
 
-    two = paths.path_n_edges == 2
-    transit = float(np.mean(
-        f_b[:, two].sum(axis=1) / np.maximum(f_b.sum(axis=1), 1e-12)))
-
     return ControllerResult(
         strategy=strategy,
         metrics=metrics,
         summary=summarize(metrics),
-        n_routing_updates=plan.n_routing,
-        n_topology_updates=n_topology,
-        final_topology=np.asarray(n_realized),
-        transit_fraction=transit,
+        n_routing_updates=art.plan.n_routing,
+        n_topology_updates=art.n_topology,
+        final_topology=np.asarray(art.n_realized),
+        transit_fraction=transit_fraction_of(paths, f_b),
         solver_seconds=solver_s,
-        n_skipped_topology=n_skipped,
-        transition_log=tuple(transition_log),
+        n_skipped_topology=art.n_skipped,
+        transition_log=art.transition_log,
     )
+
+
+def run_controller_batched(
+    fabric: Fabric,
+    trace: Trace,
+    strategy: Strategy,
+    cc=None,
+    sc: SolverConfig | None = None,
+):
+    """Plan → batch-execute equivalent of ``run_controller``.
+
+    Returns a ``ControllerResult`` with the same fields and semantics as the
+    sequential walk; see the module docstring for the parity contract.
+    """
+    from repro.core.controller import ControllerConfig
+
+    cc = cc or ControllerConfig()
+    sc = sc or SolverConfig()
+    if cc.transition is not None and not cc.realize_topology:
+        # panel decomposition (Thm. 4) needs integer, even-degree topologies
+        raise ValueError("ControllerConfig.transition requires realize_topology")
+    art = plan_artifacts(fabric, trace, strategy, cc, sc)
+    return execute_plan(fabric, trace, strategy, cc, sc, art)

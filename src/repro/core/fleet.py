@@ -24,11 +24,12 @@ import zlib
 
 import numpy as np
 
-from repro.core.graph import Fabric, uniform_topology
+from repro.core.graph import Fabric, directed_edge_index, uniform_topology
 from repro.core.traffic import Trace
 
 __all__ = ["FabricSpec", "FLEET_SPECS", "make_fabric", "make_trace", "make_fleet",
-           "sub_burst_params"]
+           "sub_burst_params", "pad_pods", "commodity_slots", "scatter_pad",
+           "fleet_bucket_key"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,3 +197,55 @@ def make_fleet(days: float = 42.0, interval_minutes: float = 15.0, seed: int = 0
         fabric = make_fabric(spec, seed)
         trace = make_trace(spec, fabric, days, interval_minutes, seed)
         yield spec, fabric, trace
+
+
+# ---- fleet-engine bucketing + padding masks ---------------------------------
+# The fleet engine (repro.core.fleet_engine) batches different-sized fabrics
+# through one padded solver/kernel shape.  Pods are rounded up to a quantum
+# (few buckets, bounded V³ padding waste); a fabric's commodities/edges embed
+# into the padded layout via `commodity_slots`, with zeros (dead capacity)
+# everywhere else — the solver's per-element valid mask
+# (JaxRoutingSolver.valid_for_pods) keeps dead links out of routing.
+
+
+def pad_pods(n_pods: int, quantum: int = 4) -> int:
+    """Round a pod count up to the bucket quantum (e.g. 6, 7, 8 → 8)."""
+    if quantum < 1:
+        raise ValueError("quantum must be >= 1")
+    return max(quantum, -(-n_pods // quantum) * quantum)
+
+
+def commodity_slots(n_pods: int, n_padded: int) -> np.ndarray:
+    """Indices of a ``n_pods``-fabric's commodities (== directed edges) inside
+    the ``n_padded``-pod enumeration.  Both enumerations are lexicographic
+    over ordered pairs, so the embedding is order-preserving."""
+    comm = directed_edge_index(n_padded)
+    mask = (comm[:, 0] < n_pods) & (comm[:, 1] < n_pods)
+    return np.nonzero(mask)[0]
+
+
+def scatter_pad(x: np.ndarray, slots: np.ndarray, size: int,
+                axis: int = -1) -> np.ndarray:
+    """Embed ``x`` into a zero array of length ``size`` along ``axis``, at
+    positions ``slots`` (the commodity/edge padding mask's inverse)."""
+    x = np.asarray(x)
+    axis = axis % x.ndim
+    shape = list(x.shape)
+    shape[axis] = size
+    out = np.zeros(shape, x.dtype)
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slots
+    out[tuple(idx)] = x
+    return out
+
+
+def fleet_bucket_key(fabric: Fabric, cc, sc, trace: Trace,
+                     quantum: int = 4) -> tuple:
+    """Bucket key for one controller sweep: everything that must agree for
+    its routing solves and its fused scoring pass to share one batch —
+    padded pod count, critical-TM count, PDHG settings, scoring backend and
+    threshold, loss config, and trace cadence."""
+    return (pad_pods(fabric.n_pods, quantum), cc.k_critical,
+            cc.pdhg_max_iters, cc.pdhg_tol, sc.skip_stage3,
+            cc.backend, cc.overload_threshold, cc.loss,
+            float(trace.interval_minutes))

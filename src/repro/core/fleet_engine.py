@@ -1,0 +1,273 @@
+"""Fleet-scale execution layer: the whole fleet sweep as one device program.
+
+Gemini's headline results are fleet-level — tens of production fabrics, each
+re-optimized on rolling windows (§5).  The per-fabric engine
+(:mod:`repro.core.engine`) already batches one sweep's routing epochs into a
+single vmapped PDHG call, but a fleet study still walked fabrics one at a
+time: every distinct pod count paid its own jit traces, its own solver
+dispatches, and its own scoring launches.
+
+:func:`run_fleet` restructures the sweep into three fleet-wide phases:
+
+1. **Plan** — :func:`repro.core.engine.plan_artifacts` per (fabric, trace,
+   strategy) job: windows, critical TMs, and the rare sequential topology
+   solves.  Artifacts are rectangular pytrees, ready to stack.
+2. **Bucket + solve** — jobs are bucketed by padded shape
+   (:func:`repro.core.fleet.fleet_bucket_key`: pods rounded up to a quantum,
+   critical-TM count, PDHG settings, scoring config).  Within a bucket every
+   job's epochs are padded into one commodity layout
+   (:func:`repro.core.fleet.scatter_pad`) and flattened onto one leading
+   batch axis; :meth:`repro.core.jaxlp.JaxRoutingSolver.solve_routing_fleet`
+   solves all of them in three vmapped jit calls, warm-started from one
+   anchor solve per fabric, with per-element pod masks keeping padded pods
+   out of routing.  When more than one device is visible (or a mesh is passed
+   explicitly) the batch axis is ``shard_map``-sharded over
+   :func:`repro.parallel.sharding.fleet_mesh`.
+3. **Fused scoring** — every job's scoring blocks (drain stages included)
+   stack onto a new leading fabric axis and one
+   :func:`repro.core.simulator.route_metrics_fleet` call — the fabric-batched
+   linkload/queueloss kernels — scores the whole bucket, then per-fabric
+   :class:`~repro.core.controller.ControllerResult`s are assembled.
+
+Jobs whose ``solver_backend`` is not ``"pdhg"`` fall back to the per-fabric
+:func:`repro.core.engine.execute_plan` (the bit-exact sequential reference
+path benches compare against).  Parity with the per-fabric controller is
+test-enforced (``tests/test_fleet_engine.py``) at 1e-3 on summary metrics —
+the only differences are PDHG-tolerance-level effects of the padded layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.engine import (execute_plan, plan_artifacts, plan_score_blocks,
+                               routing_solver_for, transit_fraction_of)
+from repro.core.fleet import (commodity_slots, fleet_bucket_key, pad_pods,
+                              scatter_pad)
+from repro.core.graph import Fabric
+from repro.core.paths import build_paths, routing_weight_matrices
+from repro.core.simulator import route_metrics_fleet, summarize
+from repro.core.solver import STRATEGIES, SolverConfig, Strategy
+from repro.core.traffic import Trace
+
+__all__ = ["FleetJob", "run_fleet", "predict_fleet"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetJob:
+    """One controller sweep: a fabric, its trace, and a strategy.
+
+    ``cc``/``sc`` default to ``ControllerConfig()``/``SolverConfig()``;
+    sweeps with different configs may coexist in one fleet (they bucket
+    separately when their solve/scoring shapes differ).
+    """
+
+    fabric: Fabric
+    trace: Trace
+    strategy: Strategy
+    cc: object = None
+    sc: SolverConfig | None = None
+
+
+def _resolve_mesh(mesh):
+    if mesh != "auto":
+        return mesh  # None (unsharded) or an explicit Mesh
+    import jax
+
+    if len(jax.devices()) <= 1:
+        return None
+    from repro.parallel.sharding import fleet_mesh
+
+    return fleet_mesh()
+
+
+def _bucket_fabric(vp: int) -> Fabric:
+    """Template fabric hosting a bucket's shared solver (only its pod count
+    matters — capacities are per-element solve inputs)."""
+    return Fabric(name=f"bucket-V{vp}", radix=np.full(vp, 2),
+                  speed=np.ones(vp))
+
+
+def run_fleet(jobs, *, pod_quantum: int = 4, mesh="auto") -> list:
+    """Run every job's controller sweep, batching routing solves and scoring
+    fleet-wide per bucket.
+
+    Args:
+      jobs: iterable of :class:`FleetJob` (or ``(fabric, trace, strategy)`` /
+        ``(fabric, trace, strategy, cc, sc)`` tuples).
+      pod_quantum: bucket quantum for :func:`repro.core.fleet.pad_pods` —
+        larger values mean fewer jit shapes but more V³ padding waste.
+      mesh: ``"auto"`` (shard over :func:`fleet_mesh` when >1 device is
+        visible), ``None`` (never shard), or an explicit 1-D
+        :class:`jax.sharding.Mesh` (e.g. a single-device mesh to exercise the
+        ``shard_map`` path).
+
+    Returns a list of :class:`~repro.core.controller.ControllerResult`, one
+    per job, in job order — same fields and semantics as
+    :func:`repro.core.controller.run_controller`.
+    """
+    from repro.core.controller import ControllerConfig
+
+    resolved = []
+    for j in jobs:
+        if not isinstance(j, FleetJob):
+            j = FleetJob(*j)
+        cc = j.cc if j.cc is not None else ControllerConfig()
+        sc = j.sc if j.sc is not None else SolverConfig()
+        if cc.transition is not None and not cc.realize_topology:
+            raise ValueError(
+                "ControllerConfig.transition requires realize_topology")
+        resolved.append((j, cc, sc))
+
+    # ---- phase 1: per-fabric plan walks (sequential topology solves) --------
+    arts = [plan_artifacts(j.fabric, j.trace, j.strategy, cc, sc)
+            for j, cc, sc in resolved]
+
+    results: list = [None] * len(resolved)
+    buckets: dict = {}
+    for i, (j, cc, sc) in enumerate(resolved):
+        if cc.solver_backend == "pdhg":
+            key = fleet_bucket_key(j.fabric, cc, sc, j.trace, pod_quantum)
+            buckets.setdefault(key, []).append(i)
+        else:
+            # sequential reference path (scipy: bit-exact legacy behavior)
+            results[i] = execute_plan(j.fabric, j.trace, j.strategy, cc, sc,
+                                      arts[i])
+    if not buckets:
+        return results
+
+    mesh = _resolve_mesh(mesh)
+    for key, idxs in buckets.items():
+        _run_bucket(key, idxs, resolved, arts, results, mesh)
+    return results
+
+
+def _run_bucket(key, idxs, resolved, arts, results, mesh):
+    """Phases 2–3 for one bucket: fleet-wide PDHG batch + fused scoring."""
+    import time
+
+    from repro.core.controller import ControllerResult
+
+    vp, m, max_iters, tol, skip_stage3 = key[:5]
+    cp = vp * (vp - 1)
+    solver = routing_solver_for(_bucket_fabric(vp), m, max_iters, tol)
+    paths_p = build_paths(vp)
+
+    # ---- phase 2: stack plan artifacts onto the flattened batch axis --------
+    t0 = time.perf_counter()
+    tms_n, caps_n, valid_n, deltas_n = [], [], [], []
+    anchor_elems, anchor_of, spans = [], [], []
+    slots_of, caps_p_of = {}, {}  # per-job embeddings, reused by scoring
+    hedging = False
+    n = 0
+    for i in idxs:
+        j, cc, sc = resolved[i]
+        art = arts[i]
+        slots = commodity_slots(j.fabric.n_pods, vp)
+        caps_p = scatter_pad(art.caps, slots, cp, axis=1)
+        slots_of[i], caps_p_of[i] = slots, caps_p
+        b = art.plan.n_routing
+        tms_n.append(scatter_pad(art.tms_padded(m), slots, cp, axis=2))
+        caps_n.append(caps_p)
+        valid = solver.valid_for_pods(j.fabric.n_pods)
+        valid_n.append(np.broadcast_to(valid, (b,) + valid.shape))
+        deltas_n.append(art.deltas)
+        anchor_of.extend([len(anchor_elems)] * b)
+        anchor_elems.append(n + b // 2)  # the per-fabric anchor epoch
+        hedging = hedging or bool(j.strategy.hedging)
+        spans.append((n, n + b))
+        n += b
+    out = solver.solve_routing_fleet(
+        np.concatenate(tms_n), np.concatenate(caps_n),
+        np.concatenate(valid_n), np.asarray(anchor_elems),
+        np.asarray(anchor_of), hedging=hedging,
+        deltas=np.concatenate(deltas_n), skip_stage3=skip_stage3, mesh=mesh)
+    solve_s = time.perf_counter() - t0
+    f_n = out["f"]  # (N, P_padded); zero mass on padded pods by construction
+
+    # ---- phase 3: one fused scoring pass over the whole bucket --------------
+    cc0 = resolved[idxs[0]][1]  # scoring config is part of the bucket key
+    blocks_fleet, w_fleet, caps_fleet, seeds_fleet = [], [], [], []
+    native_blocks_fleet, slots_fleet = [], []  # burst expansion needs these
+    f_items, w_items = [], []
+    for i, (lo, hi) in zip(idxs, spans):
+        j, cc, sc = resolved[i]
+        art = arts[i]
+        slots, caps_p = slots_of[i], caps_p_of[i]
+        f_i = f_n[lo:hi]
+        w_b = routing_weight_matrices(paths_p, f_i)  # (B, Cp, Ep)
+        art_p = art
+        if any(ev is not None for ev in art.staging):
+            # staged epochs score under padded stage weights/capacities too
+            art_p = dataclasses.replace(art, staging=tuple(
+                None if ev is None else dataclasses.replace(
+                    ev,
+                    stage_w=scatter_pad(scatter_pad(ev.stage_w, slots, cp,
+                                                    axis=1), slots, cp, axis=2),
+                    stage_caps=scatter_pad(ev.stage_caps, slots, cp, axis=1))
+                for ev in art.staging))
+        blocks, block_w, block_caps, loss_seeds = plan_score_blocks(
+            j.trace, art_p, w_b, caps_p, cc)
+        blocks_fleet.append([scatter_pad(np.asarray(bl, np.float64), slots,
+                                         cp, axis=1) for bl in blocks])
+        native_blocks_fleet.append(blocks)
+        slots_fleet.append(slots)
+        w_fleet.append(np.stack(block_w))
+        caps_fleet.append(np.stack(block_caps))
+        seeds_fleet.append(loss_seeds)
+        f_items.append(f_i)
+        w_items.append(w_b)
+    metrics_fleet = route_metrics_fleet(
+        blocks_fleet, w_fleet, caps_fleet, cc0.overload_threshold,
+        backend=cc0.backend, loss_cfg=cc0.loss,
+        loss_seeds_fleet=seeds_fleet if cc0.loss is not None else None,
+        interval_seconds=key[-1] * 60.0,
+        loss_blocks_fleet=native_blocks_fleet, loss_slots_fleet=slots_fleet)
+
+    for pos, i in enumerate(idxs):
+        j, cc, sc = resolved[i]
+        art = arts[i]
+        metrics = metrics_fleet[pos]
+        results[i] = ControllerResult(
+            strategy=j.strategy,
+            metrics=metrics,
+            summary=summarize(metrics),
+            n_routing_updates=art.plan.n_routing,
+            n_topology_updates=art.n_topology,
+            final_topology=np.asarray(art.n_realized),
+            transit_fraction=transit_fraction_of(paths_p, f_items[pos]),
+            solver_seconds=art.solver_seconds + solve_s / len(idxs),
+            n_skipped_topology=art.n_skipped,
+            transition_log=art.transition_log,
+        )
+
+
+def predict_fleet(fleet, cc=None, sc=None, cushion: float = 0.05,
+                  strategies: tuple = STRATEGIES, objective: str = "mlu",
+                  mesh="auto", pod_quantum: int = 4) -> list:
+    """Fleet-batched :func:`repro.core.predictor.predict`: simulate every
+    strategy on every fabric's training window in one :func:`run_fleet` call
+    and apply the operator objective per fabric.
+
+    Args:
+      fleet: list of ``(fabric, training_trace)`` pairs.
+
+    Returns a list of :class:`~repro.core.predictor.Prediction`, in order.
+    """
+    from repro.core.predictor import Prediction, pick_best
+
+    jobs = [FleetJob(fabric, trace, strat, cc, sc)
+            for fabric, trace in fleet for strat in strategies]
+    res = run_fleet(jobs, mesh=mesh, pod_quantum=pod_quantum)
+    k = len(strategies)
+    preds = []
+    for fi, (fabric, trace) in enumerate(fleet):
+        per = {strategies[si].name: res[fi * k + si].summary
+               for si in range(k)}
+        choice = pick_best(per, cushion, objective=objective)
+        by_name = {s.name: s for s in strategies}
+        preds.append(Prediction(fabric=fabric.name, strategy=by_name[choice],
+                                per_strategy=per, cushion=cushion))
+    return preds

@@ -32,6 +32,18 @@ one call).  Three structural choices make the iteration fast on accelerators:
   feasible — under ``vmap`` a batch runs until every element has converged,
   converged elements being frozen by the batching rule.
 
+Every core additionally takes an explicit ``valid`` slot mask (normally the
+structural ``(V, V, V)`` mask of the solver's pod count).  The fleet engine
+(:mod:`repro.core.fleet_engine`) exploits this to batch *different-sized*
+fabrics through one solver: a fabric with ``v < V`` pods is zero-padded into
+the ``V``-pod commodity layout and its per-element mask
+(:meth:`JaxRoutingSolver.valid_for_pods`) excludes padded endpoints and
+padded transit pods, so dead zero-capacity links can never masquerade as free
+capacity.  :meth:`JaxRoutingSolver.solve_routing_fleet` runs the whole
+fleet's routing epochs — flattened onto one leading batch axis, warm-started
+from one anchor solve per fabric — in three vmapped jit calls, optionally
+``shard_map``-sharded across devices (:func:`repro.parallel.sharding.fleet_mesh`).
+
 Accuracy: PDHG is a first-order method; we run to a relative tolerance that
 matches the binary-search tolerance of the paper's solver (≈1e-3), and tests
 cross-check every stage against scipy/HiGHS.
@@ -155,6 +167,13 @@ class JaxRoutingSolver:
     tol: float = 5e-3
     restart_every: int = 150  # Halpern anchor-restart period
     dual_topk: int = 128  # support cap for the dual simplex projection
+    # fleet-path batch quantization: leading batch axes round up to these so
+    # differently-sized run_fleet calls (predict sweeps vs test sweeps) reuse
+    # one jit trace per stage instead of retracing the while_loop per shape.
+    # Padding replays real elements, which converge with their originals —
+    # compile time dwarfs the wasted iterations at any realistic scale.
+    fleet_batch_quantum: int = 16
+    fleet_anchor_quantum: int = 4
 
     def __post_init__(self):
         v = self.fabric.n_pods
@@ -165,6 +184,7 @@ class JaxRoutingSolver:
         self.E = paths.n_directed
         self.K = paths.commodity_paths.shape[1]  # paths per commodity = V-1
         self.last_iters = -1
+        self._fleet_fns_cache: dict = {}  # (mesh fingerprint) -> jitted stages
 
         # commodity c = (i, j) enumeration == directed-edge enumeration
         comm = directed_edge_index(v)  # (C, 2)
@@ -227,25 +247,25 @@ class JaxRoutingSolver:
         g2 = jnp.einsum("mij,mkj->ijk", d3, yn) * self.mask_kj[None]
         return g1 + g2
 
-    def _opnorm(self, d3, ic, iters: int = 30):
+    def _opnorm(self, d3, ic, valid, iters: int = 30):
         """Power iteration for ‖U‖ (as an operator on f3)."""
 
         def body(_, vv):
             v2 = self._util_adj(self._util(vv, d3, ic), d3, ic)
             return v2 / (jnp.linalg.norm(v2) + 1e-30)
 
-        v0 = jnp.where(self.valid, 1.0, 0.0).astype(d3.dtype)
+        v0 = jnp.where(valid, 1.0, 0.0).astype(d3.dtype)
         vv = jax.lax.fori_loop(0, iters, body, v0 / jnp.linalg.norm(v0))
         return jnp.linalg.norm(self._util(vv, d3, ic))
 
-    def _proj_f(self, f3):
-        return _michelot_rows(f3, self.valid, self.V)
+    def _proj_f(self, f3, valid):
+        return _michelot_rows(f3, valid, self.V)
 
-    def _dual_min(self, coeff):
+    def _dual_min(self, coeff, valid):
         """Σ over commodities of ``min_k coeff[i, j, k]`` (valid slots only) —
         the exact minimum of a linear functional over the product of
         per-commodity simplices, i.e. the Lagrangian dual's inner problem."""
-        per_row = jnp.where(self.valid, coeff, jnp.inf).min(axis=-1)
+        per_row = jnp.where(valid, coeff, jnp.inf).min(axis=-1)
         return jnp.where(jnp.isfinite(per_row), per_row, 0.0).sum()
 
     def _hop_inv_caps(self, ic):
@@ -274,21 +294,24 @@ class JaxRoutingSolver:
             new_anchors.append(jnp.where(rs, w_new, wa))
         return out, new_anchors, jnp.where(rs, 0.0, k)
 
-    def _f_uniform(self, dtype=jnp.float32):
-        return jnp.where(self.valid, 1.0 / (self.V - 1), 0.0).astype(dtype)
+    def _f_uniform(self, valid, dtype=jnp.float32):
+        n_slots = jnp.maximum(valid.sum(-1, keepdims=True), 1).astype(dtype)
+        return jnp.where(valid, 1.0, 0.0).astype(dtype) / n_slots
 
-    def _mlu_inits(self, d3, ic):
+    def _mlu_inits(self, d3, ic, valid):
         """Cold-start point: uniform splits, dual softmax-concentrated near
         the binding constraints."""
-        f0 = self._f_uniform(d3.dtype)
+        notdiag = valid.any(-1)
+        f0 = self._f_uniform(valid, d3.dtype)
         u0 = self._util(f0, d3, ic)
         y0 = jax.nn.softmax(
-            jnp.where(self.notdiag[None], u0, -jnp.inf).reshape(-1)
+            jnp.where(notdiag[None], u0, -jnp.inf).reshape(-1)
             / (0.02 * jnp.maximum(u0.max(), 1e-12))).reshape(u0.shape)
         return f0, y0
 
-    def _mlu_core(self, d3, ic, f0, y0):
-        norm = self._opnorm(d3, ic)
+    def _mlu_core(self, d3, ic, valid, f0, y0):
+        notdiag = valid.any(-1)
+        norm = self._opnorm(d3, ic, valid)
         tau = 0.99 / jnp.maximum(norm, 1e-12)
         sig = tau
 
@@ -299,10 +322,10 @@ class JaxRoutingSolver:
         def body(s):
             f, y, fa, ya, k, it, done, last = s
             g = self._util_adj(y, d3, ic)
-            f_h = self._proj_f(f - tau * g)
+            f_h = self._proj_f(f - tau * g, valid)
             fb = 2.0 * f_h - f
             y_h = _project_simplex_topk(y + sig * self._util(fb, d3, ic),
-                                        self.notdiag[None], self.dual_topk)
+                                        notdiag[None], self.dual_topk)
             (f, y), (fa, ya), k = self._halpern(
                 [(f, f_h), (y, y_h)], [fa, ya], k)
             it = it + 1
@@ -311,7 +334,7 @@ class JaxRoutingSolver:
                 # exact duality gap of the matrix game: primal = max util of
                 # f; dual lower bound = min_f' <y, U f'> (closed form).
                 obj = self._util(f, d3, ic).max()
-                lb = self._dual_min(self._util_adj(y, d3, ic))
+                lb = self._dual_min(self._util_adj(y, d3, ic), valid)
                 gap_ok = obj - lb <= self.tol * jnp.maximum(obj, 1e-6)
                 return gap_ok, obj
 
@@ -327,21 +350,26 @@ class JaxRoutingSolver:
         return f, self._util(f, d3, ic).max(), it, y
 
     @functools.partial(jax.jit, static_argnums=0)
-    def _solve_mlu(self, d3, ic):
-        return self._mlu_core(d3, ic, *self._mlu_inits(d3, ic))
+    def _solve_mlu(self, d3, ic, valid):
+        return self._mlu_core(d3, ic, valid, *self._mlu_inits(d3, ic, valid))
 
     @functools.partial(jax.jit, static_argnums=0)
-    def _solve_mlu_batch(self, d3, ic):
+    def _solve_mlu_batch(self, d3, ic, valid):
         return jax.vmap(
-            lambda d, c: self._mlu_core(d, c, *self._mlu_inits(d, c)))(d3, ic)
+            lambda d, c, v: self._mlu_core(
+                d, c, v, *self._mlu_inits(d, c, v)))(d3, ic, valid)
 
     @functools.partial(jax.jit, static_argnums=0)
-    def _solve_mlu_batch_warm(self, d3, ic, f0, y0):
-        return jax.vmap(self._mlu_core)(d3, ic, f0, y0)
+    def _solve_mlu_batch_warm(self, d3, ic, valid, f0, y0):
+        return jax.vmap(self._mlu_core)(d3, ic, valid, f0, y0)
+
+    def _tile_valid(self, b: int) -> jnp.ndarray:
+        return jnp.broadcast_to(self.valid, (b,) + self.valid.shape)
 
     def solve_mlu(self, tms: np.ndarray, capacities: np.ndarray):
         f3, u, it, _ = self._solve_mlu(self._dense_tms(tms),
-                                       self._dense_inv_cap(capacities))
+                                       self._dense_inv_cap(capacities),
+                                       self.valid)
         self.last_iters = int(it)
         return self._flat_f(f3), float(u)
 
@@ -349,32 +377,32 @@ class JaxRoutingSolver:
         """Batched stage 1: tms (B, m, C), capacities (B, E) → (f (B, P), u (B,))."""
         d3 = jnp.stack([self._dense_tms(t) for t in tms])
         ic = jnp.stack([self._dense_inv_cap(c) for c in capacities])
-        f3, u, _, _ = self._solve_mlu_batch(d3, ic)
+        f3, u, _, _ = self._solve_mlu_batch(d3, ic, self._tile_valid(d3.shape[0]))
         return self._flat_f(np.asarray(f3)), np.asarray(u, np.float64)
 
     # ---- stage 2: min r  ≡  min_f max(δ f / C) s.t. U(f) ≤ u* ---------------
 
-    def _zvalid(self):
-        zv = self.valid[..., None] & jnp.asarray([True, True])
+    def _zvalid(self, valid):
+        zv = valid[..., None] & jnp.asarray([True, True])
         return zv & jnp.concatenate(
             [jnp.ones_like(zv[..., :1]),
              jnp.broadcast_to((self.mask_kj > 0)[None, :, :, None],
                               zv[..., 1:].shape)], axis=-1)
 
-    def _risk_inits(self, d3):
-        f0 = self._f_uniform(d3.dtype)
+    def _risk_inits(self, d3, valid):
+        f0 = self._f_uniform(valid, d3.dtype)
         y0 = jnp.zeros((self.m, self.V, self.V), d3.dtype)
-        z0 = self._zvalid().astype(d3.dtype)
+        z0 = self._zvalid(valid).astype(d3.dtype)
         z0 = z0 / jnp.maximum(z0.sum(), 1.0)
         return f0, y0, z0
 
-    def _risk_core(self, d3, ic, u_star, delta, f0, y0, z0):
-        norm = self._opnorm(d3, ic)
+    def _risk_core(self, d3, ic, valid, u_star, delta, f0, y0, z0):
+        norm = self._opnorm(d3, ic, valid)
         ic0, ic1 = self._hop_inv_caps(ic)
         rnorm = delta * ic.max() * jnp.sqrt(2.0)
         tau = 0.99 / jnp.maximum(norm + rnorm, 1e-12)
         sig = tau
-        zvalid = self._zvalid()
+        zvalid = self._zvalid(valid)
 
         def risk_of(f3):
             return jnp.stack([delta * f3 * ic0, delta * f3 * ic1], axis=-1)
@@ -387,7 +415,7 @@ class JaxRoutingSolver:
             f, y, z, fa, ya, za, k, it, done, last = s
             gf = (self._util_adj(y, d3, ic)
                   + delta * (z[..., 0] * ic0 + z[..., 1] * ic1))
-            f_h = self._proj_f(f - tau * gf)
+            f_h = self._proj_f(f - tau * gf, valid)
             fb = 2.0 * f_h - f
             y_h = jnp.maximum(y + sig * (self._util(fb, d3, ic) - u_star), 0.0)
             z_h = _project_simplex_topk(z + sig * risk_of(fb), zvalid,
@@ -406,7 +434,7 @@ class JaxRoutingSolver:
                 u_chk = self._util(f, d3, ic).max()
                 coeff = (self._util_adj(y, d3, ic)
                          + delta * (z[..., 0] * ic0 + z[..., 1] * ic1))
-                lb = self._dual_min(coeff) - u_star * y.sum()
+                lb = self._dual_min(coeff, valid) - u_star * y.sum()
                 gap_ok = obj - lb <= self.tol * jnp.maximum(obj, 1e-9)
                 stall = jnp.abs(obj - last) <= 10.0 * self.tol * jnp.maximum(
                     obj, 1e-9)
@@ -425,41 +453,43 @@ class JaxRoutingSolver:
         return f, risk_of(f).max(), self._util(f, d3, ic).max(), y, z
 
     @functools.partial(jax.jit, static_argnums=0)
-    def _solve_risk(self, d3, ic, u_star, delta):
-        return self._risk_core(d3, ic, u_star, delta, *self._risk_inits(d3))
+    def _solve_risk(self, d3, ic, valid, u_star, delta):
+        return self._risk_core(d3, ic, valid, u_star, delta,
+                               *self._risk_inits(d3, valid))
 
     @functools.partial(jax.jit, static_argnums=0)
-    def _solve_risk_batch(self, d3, ic, u_star, delta):
-        return jax.vmap(lambda d, c, u, dl: self._risk_core(
-            d, c, u, dl, *self._risk_inits(d)))(d3, ic, u_star, delta)
+    def _solve_risk_batch(self, d3, ic, valid, u_star, delta):
+        return jax.vmap(lambda d, c, v, u, dl: self._risk_core(
+            d, c, v, u, dl, *self._risk_inits(d, v)))(d3, ic, valid, u_star, delta)
 
     @functools.partial(jax.jit, static_argnums=0)
-    def _solve_risk_batch_warm(self, d3, ic, u_star, delta, f0, y0, z0):
-        return jax.vmap(self._risk_core)(d3, ic, u_star, delta, f0, y0, z0)
+    def _solve_risk_batch_warm(self, d3, ic, valid, u_star, delta, f0, y0, z0):
+        return jax.vmap(self._risk_core)(d3, ic, valid, u_star, delta, f0, y0, z0)
 
     def solve_risk(self, tms, capacities, u_star, delta):
         f3, r, u, _, _ = self._solve_risk(self._dense_tms(tms),
                                           self._dense_inv_cap(capacities),
+                                          self.valid,
                                           jnp.float32(u_star), jnp.float32(delta))
         return self._flat_f(f3), float(r), float(u)
 
     # ---- stage 3: min stretch s.t. U(f) ≤ u*, risk ≤ r* ---------------------
 
-    def _stretch_core(self, d3, ic, u_star, r_star, delta, f_init, y0):
+    def _stretch_core(self, d3, ic, valid, u_star, r_star, delta, f_init, y0):
         """min <cost, f> over the *capped* simplex — the risk budget
         ``δ·f·ic ≤ r*`` is a per-slot upper bound ``f ≤ r*/(δ·max ic)``, so it
         is enforced exactly by projection (no slow risk duals); only the MLU
         budget keeps a Lagrange dual ``y``."""
-        norm = self._opnorm(d3, ic)
+        norm = self._opnorm(d3, ic, valid)
         ic0, ic1 = self._hop_inv_caps(ic)
         tau = 0.99 / jnp.maximum(norm, 1e-12)
         sig = tau
         dsum = d3.sum(axis=0)  # (V, V)
-        cost = jnp.where(self.valid, dsum[:, :, None] * self._len3, 0.0)
+        cost = jnp.where(valid, dsum[:, :, None] * self._len3, 0.0)
         cost = cost / (jnp.abs(cost).max() + 1e-30)  # scale-free objective
         ub = r_star / jnp.maximum(delta * jnp.maximum(ic0, ic1), 1e-30)
         ub = jnp.minimum(ub, 1.0)  # simplex rows never exceed 1 anyway
-        f0 = _capped_simplex_rows(f_init, ub, self.valid)  # risk-feasible start
+        f0 = _capped_simplex_rows(f_init, ub, valid)  # risk-feasible start
 
         def cond(s):
             return jnp.logical_and(s[-3] < self.max_iters,
@@ -468,7 +498,7 @@ class JaxRoutingSolver:
         def body(s):
             f, y, fa, ya, k, it, done, last = s
             gf = cost + self._util_adj(y, d3, ic)
-            f_h = _capped_simplex_rows(f - tau * gf, ub, self.valid)
+            f_h = _capped_simplex_rows(f - tau * gf, ub, valid)
             fb = 2.0 * f_h - f
             y_h = jnp.maximum(y + sig * (self._util(fb, d3, ic) - u_star), 0.0)
             (f, y), (fa, ya), k = self._halpern([(f, f_h), (y, y_h)],
@@ -483,7 +513,7 @@ class JaxRoutingSolver:
                 obj = (cost * f).sum()
                 u_chk = self._util(f, d3, ic).max()
                 coeff = cost + self._util_adj(y, d3, ic)
-                lb = self._dual_min(coeff) - u_star * y.sum()
+                lb = self._dual_min(coeff, valid) - u_star * y.sum()
                 gap_ok = obj - lb <= self.tol * jnp.maximum(jnp.abs(obj), 1e-9)
                 stall = jnp.abs(obj - last) <= 10.0 * self.tol * jnp.maximum(
                     jnp.abs(obj), 1e-9)
@@ -505,29 +535,30 @@ class JaxRoutingSolver:
         return (jnp.zeros((self.m, self.V, self.V), d3.dtype),)
 
     @functools.partial(jax.jit, static_argnums=0)
-    def _solve_stretch(self, d3, ic, u_star, r_star, delta, f_init):
-        return self._stretch_core(d3, ic, u_star, r_star, delta, f_init,
+    def _solve_stretch(self, d3, ic, valid, u_star, r_star, delta, f_init):
+        return self._stretch_core(d3, ic, valid, u_star, r_star, delta, f_init,
                                   *self._stretch_inits(d3))
 
     @functools.partial(jax.jit, static_argnums=0)
-    def _solve_stretch_batch(self, d3, ic, u_star, r_star, delta, f_init):
-        return jax.vmap(lambda d, c, u, r, dl, f: self._stretch_core(
-            d, c, u, r, dl, f, *self._stretch_inits(d)))(
-                d3, ic, u_star, r_star, delta, f_init)
+    def _solve_stretch_batch(self, d3, ic, valid, u_star, r_star, delta,
+                             f_init):
+        return jax.vmap(lambda d, c, v, u, r, dl, f: self._stretch_core(
+            d, c, v, u, r, dl, f, *self._stretch_inits(d)))(
+                d3, ic, valid, u_star, r_star, delta, f_init)
 
     @functools.partial(jax.jit, static_argnums=0)
-    def _solve_stretch_batch_warm(self, d3, ic, u_star, r_star, delta,
+    def _solve_stretch_batch_warm(self, d3, ic, valid, u_star, r_star, delta,
                                   f_init, y0):
-        return jax.vmap(self._stretch_core)(d3, ic, u_star, r_star, delta,
-                                            f_init, y0)
+        return jax.vmap(self._stretch_core)(d3, ic, valid, u_star, r_star,
+                                            delta, f_init, y0)
 
     def solve_stretch(self, tms, capacities, u_star, r_star, delta):
         d3 = self._dense_tms(tms)
         ic = self._dense_inv_cap(capacities)
         r = jnp.float32(r_star if r_star is not None else 1e9)
         dl = jnp.float32(delta if (r_star is not None and delta) else 0.0)
-        f3, _ = self._solve_stretch(d3, ic, jnp.float32(u_star), r, dl,
-                                    self._f_uniform())
+        f3, _ = self._solve_stretch(d3, ic, self.valid, jnp.float32(u_star),
+                                    r, dl, self._f_uniform(self.valid))
         return self._flat_f(f3)
 
     # ---- full routing pipeline, batched over epochs -------------------------
@@ -556,21 +587,24 @@ class JaxRoutingSolver:
         d3 = jnp.stack([self._dense_tms(t) for t in tms])
         ic = jnp.stack([self._dense_inv_cap(c) for c in capacities])
         a = b // 2  # anchor epoch
+        valid_b = self._tile_valid(b)
 
         def tile(x):
             return jnp.broadcast_to(x[None], (b,) + x.shape)
 
-        f_a, _, _, y_a = self._solve_mlu(d3[a], ic[a])
-        f3, u, _, _ = self._solve_mlu_batch_warm(d3, ic, tile(f_a), tile(y_a))
+        f_a, _, _, y_a = self._solve_mlu(d3[a], ic[a], self.valid)
+        f3, u, _, _ = self._solve_mlu_batch_warm(d3, ic, valid_b,
+                                                 tile(f_a), tile(y_a))
         u = jnp.asarray(u)
         u_budget = u * 1.005 + 1e-9
         r_star = None
         if hedging:
             dl = jnp.asarray(np.asarray(deltas, np.float32))
             f2_a, _, _, y2_a, z2_a = self._solve_risk(
-                d3[a], ic[a], u_budget[a], dl[a])
+                d3[a], ic[a], self.valid, u_budget[a], dl[a])
             f3r, r, _, _, _ = self._solve_risk_batch_warm(
-                d3, ic, u_budget, dl, tile(f2_a), tile(y2_a), tile(z2_a))
+                d3, ic, valid_b, u_budget, dl,
+                tile(f2_a), tile(y2_a), tile(z2_a))
             use = (dl > 0)[:, None, None, None]
             f3 = jnp.where(use, f3r, f3)
             r_star = jnp.where(dl > 0, jnp.asarray(r), np.inf)
@@ -585,9 +619,166 @@ class JaxRoutingSolver:
                                   jnp.asarray(np.asarray(deltas, np.float32)), 0.0)
             f3 = jnp.asarray(f3)
             _, y3_a = self._solve_stretch(
-                d3[a], ic[a], u_budget[a], r_in[a], dl_in[a], f3[a])
+                d3[a], ic[a], self.valid, u_budget[a], r_in[a], dl_in[a], f3[a])
             f3, _ = self._solve_stretch_batch_warm(
-                d3, ic, u_budget, r_in, dl_in, f3, tile(y3_a))
+                d3, ic, valid_b, u_budget, r_in, dl_in, f3, tile(y3_a))
+        f = self._flat_f(np.asarray(f3))
+        out_r = None
+        if r_star is not None:
+            rr = np.asarray(r_star, np.float64)
+            out_r = np.where(np.isfinite(rr), rr, np.nan)
+        return {"f": f, "u_star": np.asarray(u, np.float64), "r_star": out_r}
+
+    # ---- fleet batch: many fabrics (padded to this solver's V) at once ------
+
+    def valid_for_pods(self, n_real: int) -> np.ndarray:
+        """Slot mask for a fabric with ``n_real ≤ V`` pods embedded in this
+        solver's ``V``-pod layout: commodities with a padded endpoint vanish,
+        and padded pods are excluded as transit — their zero-capacity links
+        carry ``inv_cap = 0`` and would otherwise look like free capacity."""
+        v = self.V
+        ii, jj, kk = np.meshgrid(np.arange(v), np.arange(v), np.arange(v),
+                                 indexing="ij")
+        real = (ii < n_real) & (jj < n_real) & (kk < n_real)
+        return np.asarray(self.valid) & real
+
+    def _fleet_fns(self, mesh):
+        """Jitted batched stage solves for the fleet path, optionally
+        ``shard_map``-sharded over the leading (flattened fabric×epoch) axis.
+        Cached per mesh fingerprint — building shard_map closures is cheap but
+        jit traces are not."""
+        key = (None if mesh is None else
+               (mesh.axis_names, tuple(d.id for d in mesh.devices.flat)))
+        if key not in self._fleet_fns_cache:
+            def mlu(d3, ic, valid, f0, y0):
+                return jax.vmap(self._mlu_core)(d3, ic, valid, f0, y0)
+
+            def risk(d3, ic, valid, u, dl, f0, y0, z0):
+                return jax.vmap(self._risk_core)(d3, ic, valid, u, dl,
+                                                 f0, y0, z0)
+
+            def stretch(d3, ic, valid, u, r, dl, f0, y0):
+                return jax.vmap(self._stretch_core)(d3, ic, valid, u, r, dl,
+                                                    f0, y0)
+
+            fns = {"mlu": mlu, "risk": risk, "stretch": stretch}
+            if mesh is not None:
+                from repro.parallel.sharding import shard_leading
+
+                fns = {k: shard_leading(fn, mesh) for k, fn in fns.items()}
+            self._fleet_fns_cache[key] = {k: jax.jit(fn)
+                                          for k, fn in fns.items()}
+        return self._fleet_fns_cache[key]
+
+    @staticmethod
+    def _pad_leading(args, target: int):
+        """Pad every array's leading axis to ``target`` by replaying its last
+        element (a real element, so padding converges with its original)."""
+        return tuple(
+            a if a.shape[0] >= target else jnp.concatenate(
+                [a, jnp.broadcast_to(a[-1:], (target - a.shape[0],)
+                                     + a.shape[1:])])
+            for a in args)
+
+    def _batch_target(self, n: int, quantum: int, mesh) -> int:
+        target = -(-n // max(quantum, 1)) * max(quantum, 1)
+        if mesh is not None:
+            size = mesh.devices.size
+            target = -(-target // size) * size
+        return target
+
+    def _fleet_run(self, mesh, stage: str, *args):
+        """Run one batched stage, quantizing the batch size (shape-stable jit
+        traces across differently-sized fleet calls) and padding to the mesh's
+        shard count; padded rows are stripped on return."""
+        fn = self._fleet_fns(mesh)[stage]
+        n = args[0].shape[0]
+        args = self._pad_leading(
+            args, self._batch_target(n, self.fleet_batch_quantum, mesh))
+        out = fn(*args)
+        return tuple(o[:n] for o in out)
+
+    def _anchor_run(self, fn, *args):
+        """Run a batched cold anchor solve at a quantized batch size."""
+        n = args[0].shape[0]
+        args = self._pad_leading(
+            args, self._batch_target(n, self.fleet_anchor_quantum, None))
+        out = fn(*args)
+        return tuple(o[:n] for o in out)
+
+    def solve_routing_fleet(self, tms: np.ndarray, capacities: np.ndarray,
+                            valids: np.ndarray, anchor_elems: np.ndarray,
+                            anchor_of: np.ndarray, hedging: bool,
+                            deltas: np.ndarray | None = None,
+                            skip_stage3: bool = False, mesh=None):
+        """Stages 1 → [2] → 3 for the routing epochs of *many fabrics* at once.
+
+        The flattened batch concatenates every fabric's epochs; element ``i``
+        belongs to the fabric whose anchor is ``anchor_elems[anchor_of[i]]``.
+        All ``F`` fabric anchors are solved cold in one batched call, then the
+        full batch runs warm-started from its own fabric's anchor — the exact
+        fleet-wide analogue of :meth:`solve_routing_batch`'s single-fabric
+        anchor scheme, so per-element results match the per-fabric path to
+        solver tolerance.
+
+        Args:
+          tms: (N, m, C) critical TMs in this solver's (padded) layout.
+          capacities: (N, E) directed capacities (zero on padded links).
+          valids: (N, V, V, V) per-element slot masks
+            (:meth:`valid_for_pods`).
+          anchor_elems: (F,) element index of each fabric's anchor epoch.
+          anchor_of: (N,) index into ``anchor_elems`` per element.
+          hedging / deltas / skip_stage3: as :meth:`solve_routing_batch`.
+          mesh: optional 1-D :class:`jax.sharding.Mesh`
+            (:func:`repro.parallel.sharding.fleet_mesh`) — shards every
+            batched solve over its device axis via ``shard_map``.
+
+        Returns dict with ``f`` (N, P), ``u_star`` (N,), ``r_star`` (N,)|None.
+        """
+        d3 = jnp.stack([self._dense_tms(t) for t in tms])
+        ic = jnp.stack([self._dense_inv_cap(c) for c in capacities])
+        valids = jnp.asarray(valids)
+        a_el = np.asarray(anchor_elems)
+        ga = np.asarray(anchor_of)
+
+        f_a, _, _, y_a = self._anchor_run(self._solve_mlu_batch,
+                                          d3[a_el], ic[a_el], valids[a_el])
+        f3, u, _, _ = self._fleet_run(
+            mesh, "mlu", d3, ic, valids,
+            jnp.asarray(f_a)[ga], jnp.asarray(y_a)[ga])
+        u = jnp.asarray(u)
+        u_budget = u * 1.005 + 1e-9
+        r_star = None
+        if hedging:
+            dl = jnp.asarray(np.asarray(deltas, np.float32))
+            f2_a, _, _, y2_a, z2_a = self._anchor_run(
+                self._solve_risk_batch,
+                d3[a_el], ic[a_el], valids[a_el], u_budget[a_el], dl[a_el])
+            f3r, r, _, _, _ = self._fleet_run(
+                mesh, "risk", d3, ic, valids, u_budget, dl,
+                jnp.asarray(f2_a)[ga], jnp.asarray(y2_a)[ga],
+                jnp.asarray(z2_a)[ga])
+            use = (dl > 0)[:, None, None, None]
+            f3 = jnp.where(use, f3r, f3)
+            r_star = jnp.where(dl > 0, jnp.asarray(r), np.inf)
+        if not skip_stage3:
+            n = d3.shape[0]
+            if r_star is None:
+                r_in = jnp.full((n,), 1e9, jnp.float32)
+                dl_in = jnp.zeros((n,), jnp.float32)
+            else:
+                r_in = jnp.where(jnp.isfinite(r_star),
+                                 r_star * 1.005 + 1e-12, 1e9).astype(jnp.float32)
+                dl_in = jnp.where(jnp.isfinite(r_star),
+                                  jnp.asarray(np.asarray(deltas, np.float32)), 0.0)
+            f3 = jnp.asarray(f3)
+            _, y3_a = self._anchor_run(
+                self._solve_stretch_batch,
+                d3[a_el], ic[a_el], valids[a_el], u_budget[a_el],
+                r_in[a_el], dl_in[a_el], f3[a_el])
+            f3, _ = self._fleet_run(
+                mesh, "stretch", d3, ic, valids, u_budget, r_in, dl_in,
+                f3, jnp.asarray(y3_a)[ga])
         f = self._flat_f(np.asarray(f3))
         out_r = None
         if r_star is not None:

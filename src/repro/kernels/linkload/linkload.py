@@ -29,7 +29,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["linkload_metrics_kernel", "linkload_pallas",
-           "linkload_batched_kernel", "linkload_pallas_batched"]
+           "linkload_batched_kernel", "linkload_pallas_batched",
+           "linkload_fleet_kernel", "linkload_pallas_fleet"]
 
 
 def linkload_metrics_kernel(dem_ref, w_ref, invcap_ref, thr_ref,
@@ -154,6 +155,79 @@ def linkload_pallas_batched(demand, w, inv_cap, threshold,
             pl.BlockSpec((1, bc, be), lambda bi, ti, ei, ci: (bi, ci, ei)),
             pl.BlockSpec((1, 1, be), lambda bi, ti, ei, ci: (bi, 0, ei)),
             pl.BlockSpec((1, 1), lambda bi, ti, ei, ci: (0, 0)),
+        ],
+        out_specs=[out_spec] * 4,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bt, be), jnp.float32)],
+        interpret=interpret,
+    )(demand, w, inv_cap, threshold)
+    return mlu[..., 0], alu[..., 0], olr[..., 0], tot[..., 0]
+
+
+def linkload_fleet_kernel(dem_ref, w_ref, invcap_ref, thr_ref,
+                          mlu_ref, alu_ref, olr_ref, tot_ref, acc_ref):
+    """One (f, b, bt, be) tile step of the fleet-batched matmul+metrics sweep.
+
+    Identical accumulation logic to :func:`linkload_batched_kernel`, with one
+    more leading *fabric* grid axis on top of the epoch axis: every
+    (fabric, epoch) pair carries its own routing-weight matrix and capacity
+    row, so an entire fleet bucket — every fabric's every scoring block —
+    is a single kernel launch.
+    """
+    e_idx = pl.program_id(3)
+    c_idx = pl.program_id(4)
+    n_c = pl.num_programs(4)
+
+    @pl.when(c_idx == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        dem_ref[0, 0], w_ref[0, 0], preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(c_idx == n_c - 1, e_idx == 0))
+    def _init_out():
+        mlu_ref[...] = jnp.zeros_like(mlu_ref)
+        alu_ref[...] = jnp.zeros_like(alu_ref)
+        olr_ref[...] = jnp.zeros_like(olr_ref)
+        tot_ref[...] = jnp.zeros_like(tot_ref)
+
+    @pl.when(c_idx == n_c - 1)
+    def _reduce_tile():
+        load = acc_ref[...]  # (bt, be)
+        util = load * invcap_ref[0, 0]  # broadcast (1, be)
+        thr = thr_ref[0, 0]
+        mlu_ref[0, 0] = jnp.maximum(mlu_ref[0, 0],
+                                    util.max(axis=1, keepdims=True))
+        alu_ref[0, 0] += util.sum(axis=1, keepdims=True)
+        olr_ref[0, 0] += (util > thr).astype(jnp.float32).sum(axis=1,
+                                                              keepdims=True)
+        tot_ref[0, 0] += load.sum(axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "be", "bc", "interpret"))
+def linkload_pallas_fleet(demand, w, inv_cap, threshold,
+                          bt: int = 256, be: int = 128, bc: int = 128,
+                          interpret: bool = False):
+    """Fleet-batched fused metrics over pre-padded inputs.
+
+    demand (F, B, T, C), w (F, B, C, E), inv_cap (F, B, 1, E), threshold
+    (1, 1); returns (mlu, alu_sum, olr_count, load_sum), each (F, B, T).
+    """
+    f, b, t, c = demand.shape
+    _, _, _, e = w.shape
+    assert t % bt == 0 and c % bc == 0 and e % be == 0, "inputs must be padded"
+    grid = (f, b, t // bt, e // be, c // bc)
+    out_shape = [jax.ShapeDtypeStruct((f, b, t, 1), jnp.float32)] * 4
+    out_spec = pl.BlockSpec((1, 1, bt, 1), lambda fi, bi, ti, ei, ci: (fi, bi, ti, 0))
+    mlu, alu, olr, tot = pl.pallas_call(
+        linkload_fleet_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bt, bc), lambda fi, bi, ti, ei, ci: (fi, bi, ti, ci)),
+            pl.BlockSpec((1, 1, bc, be), lambda fi, bi, ti, ei, ci: (fi, bi, ci, ei)),
+            pl.BlockSpec((1, 1, 1, be), lambda fi, bi, ti, ei, ci: (fi, bi, 0, ei)),
+            pl.BlockSpec((1, 1), lambda fi, bi, ti, ei, ci: (0, 0)),
         ],
         out_specs=[out_spec] * 4,
         out_shape=out_shape,

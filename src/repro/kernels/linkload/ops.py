@@ -12,11 +12,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.linkload.linkload import linkload_pallas, linkload_pallas_batched
+from repro.kernels.linkload.linkload import (linkload_pallas,
+                                             linkload_pallas_batched,
+                                             linkload_pallas_fleet)
 from repro.kernels.linkload.ref import (linkload_metrics_batched_ref,
+                                        linkload_metrics_fleet_ref,
                                         linkload_metrics_ref)
 
-__all__ = ["link_metrics", "link_metrics_batched"]
+__all__ = ["link_metrics", "link_metrics_batched", "link_metrics_fleet"]
 
 
 def _pad_to(x: np.ndarray, axis: int, mult: int) -> np.ndarray:
@@ -130,4 +133,57 @@ def link_metrics_batched(demand, weights, capacities, threshold: float = 0.8,
         alu_sum = util.sum(axis=2)
         olr_cnt = (util > threshold).sum(axis=2)
         tot = load.sum(axis=2)
+    return mlu, alu_sum / n_live, olr_cnt / n_live, tot
+
+
+def link_metrics_fleet(demand, weights, capacities, threshold: float = 0.8,
+                       backend: str = "pallas",
+                       bt: int = 128, be: int = 128, bc: int = 128):
+    """Fabric-batched :func:`link_metrics_batched`: one call scores every
+    scoring block of every fabric in a fleet bucket.
+
+    Args:
+      demand: (F, B, T, C) per-(fabric, block) demand (zero rows/blocks are
+        padding — scored but trimmed by the caller).
+      weights: (F, B, C, E) per-(fabric, block) routing-weight matrices.
+      capacities: (F, B, E) per-(fabric, block) directed capacities (zero on
+        padded links and padded blocks).
+      threshold / backend / block sizes: as :func:`link_metrics`.
+
+    Returns (mlu, alu, olr, total_load), each of shape (F, B, T); ALU/OLR
+    are averaged over each block's own live links.
+    """
+    demand = np.asarray(demand)
+    weights = np.asarray(weights)
+    cap = np.asarray(capacities, np.float64)
+    live = cap > 1e-9  # (F, B, E)
+    n_live = np.maximum(live.sum(axis=2), 1)[..., None]  # (F, B, 1)
+    inv_cap = np.where(live, 1.0 / np.maximum(cap, 1e-9), 0.0)
+
+    t_orig = demand.shape[2]
+    if backend == "pallas":
+        bt = _shrink_bt(bt, t_orig)
+        d = _pad_to(_pad_to(demand.astype(np.float32), 2, bt), 3, bc)
+        w = _pad_to(_pad_to(weights.astype(np.float32), 2, bc), 3, be)
+        ic = _pad_to(inv_cap[:, :, None, :].astype(np.float32), 3, be)
+        interpret = jax.default_backend() == "cpu"
+        mlu, alu_sum, olr_cnt, tot = linkload_pallas_fleet(
+            jnp.asarray(d), jnp.asarray(w), jnp.asarray(ic),
+            jnp.full((1, 1), threshold, jnp.float32),
+            bt=bt, be=be, bc=bc, interpret=interpret)
+        mlu, alu_sum, olr_cnt, tot = (
+            np.asarray(x)[:, :, :t_orig] for x in (mlu, alu_sum, olr_cnt, tot))
+    elif backend in ("jnp", "jax"):
+        mlu, alu_sum, olr_cnt, tot = (
+            np.asarray(x) for x in linkload_metrics_fleet_ref(
+                jnp.asarray(demand, jnp.float32),
+                jnp.asarray(weights, jnp.float32),
+                jnp.asarray(inv_cap[:, :, None, :], jnp.float32), threshold))
+    else:  # numpy
+        load = demand.astype(np.float64) @ weights.astype(np.float64)  # (F,B,T,E)
+        util = load * inv_cap[:, :, None, :]
+        mlu = util.max(axis=3)
+        alu_sum = util.sum(axis=3)
+        olr_cnt = (util > threshold).sum(axis=3)
+        tot = load.sum(axis=3)
     return mlu, alu_sum / n_live, olr_cnt / n_live, tot

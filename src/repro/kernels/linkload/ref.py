@@ -29,3 +29,12 @@ def linkload_metrics_batched_ref(demand, w, inv_cap, threshold):
 
     return jax.vmap(linkload_metrics_ref, in_axes=(0, 0, 0, None))(
         demand, w, inv_cap, threshold)
+
+
+def linkload_metrics_fleet_ref(demand, w, inv_cap, threshold):
+    """Fleet-batched reference: demand (F, B, T, C), w (F, B, C, E),
+    inv_cap (F, B, 1, E); returns each metric with shape (F, B, T)."""
+    import jax
+
+    return jax.vmap(linkload_metrics_batched_ref, in_axes=(0, 0, 0, None))(
+        demand, w, inv_cap, threshold)

@@ -14,10 +14,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.queueloss.queueloss import queueloss_pallas, queueloss_pallas_batched
-from repro.kernels.queueloss.ref import queueloss_batched_ref, queueloss_ref
+from repro.kernels.queueloss.queueloss import (queueloss_pallas,
+                                               queueloss_pallas_batched,
+                                               queueloss_pallas_fleet)
+from repro.kernels.queueloss.ref import (queueloss_batched_ref,
+                                         queueloss_fleet_ref, queueloss_ref)
 
-__all__ = ["queue_loss", "queue_loss_batched"]
+__all__ = ["queue_loss", "queue_loss_batched", "queue_loss_fleet"]
 
 
 def _pad_to(x: np.ndarray, axis: int, mult: int) -> np.ndarray:
@@ -117,6 +120,54 @@ def queue_loss_batched(demand, weights, capacities, buffers, dt: float,
         drop, tot = (np.asarray(x, np.float64)[:, :ts_orig] for x in (drop, tot))
     else:  # jnp / jax
         drop, tot = (np.asarray(x, np.float64) for x in queueloss_batched_ref(
+            jnp.asarray(demand), jnp.asarray(weights),
+            jnp.asarray(cap), jnp.asarray(buf), jnp.float32(dt)))
+    return drop, tot
+
+
+def queue_loss_fleet(demand, weights, capacities, buffers, dt: float,
+                     backend: str = "pallas",
+                     bt: int = 128, be: int = 128, bc: int = 128):
+    """Fabric-batched :func:`queue_loss_batched`: one call scans every scoring
+    block of every fabric in a fleet bucket.
+
+    Args:
+      demand: (F, B, TS, C) sub-interval demand blocks (zero-padded trailing
+        sub-steps and all-zero padded blocks only drain queues, never drop).
+      weights: (F, B, C, E); capacities/buffers: (F, B, E); dt: sub-step
+        seconds.
+
+    Queue state starts empty in every (fabric, block) pair.  Returns
+    (drop, tot), each (F, B, TS) float64.
+    """
+    if backend not in ("pallas", "jnp", "jax"):  # numpy: float64 end to end
+        from repro.burst.queue import queue_loss_numpy
+
+        out = [[queue_loss_numpy(d, w, c, bf, dt)
+                for d, w, c, bf in zip(df, wf, cf, bff)]
+               for df, wf, cf, bff in zip(demand, weights, capacities, buffers)]
+        return (np.stack([[o[0] for o in row] for row in out]),
+                np.stack([[o[1] for o in row] for row in out]))
+    demand = np.asarray(demand, np.float32)
+    weights = np.asarray(weights, np.float32)
+    cap = np.asarray(capacities, np.float32)
+    buf = np.asarray(buffers, np.float32)
+    ts_orig = demand.shape[2]
+    if backend == "pallas":
+        bt = _shrink_bt(bt, ts_orig)
+        d = _pad_to(_pad_to(demand, 2, bt), 3, bc)
+        w = _pad_to(_pad_to(weights, 2, bc), 3, be)
+        cp = _pad_to(cap[:, :, None, :], 3, be)
+        bf = _pad_to(buf[:, :, None, :], 3, be)
+        interpret = jax.default_backend() == "cpu"
+        drop, tot = queueloss_pallas_fleet(
+            jnp.asarray(d), jnp.asarray(w), jnp.asarray(cp), jnp.asarray(bf),
+            jnp.full((1, 1), dt, jnp.float32),
+            bt=bt, be=be, bc=bc, interpret=interpret)
+        drop, tot = (np.asarray(x, np.float64)[:, :, :ts_orig]
+                     for x in (drop, tot))
+    else:  # jnp / jax
+        drop, tot = (np.asarray(x, np.float64) for x in queueloss_fleet_ref(
             jnp.asarray(demand), jnp.asarray(weights),
             jnp.asarray(cap), jnp.asarray(buf), jnp.float32(dt)))
     return drop, tot

@@ -45,3 +45,11 @@ def queueloss_batched_ref(demand, w, cap, buf, dt):
     load_sum), each (B, TS)."""
     return jax.vmap(queueloss_ref, in_axes=(0, 0, 0, 0, None))(
         demand, w, cap, buf, dt)
+
+
+def queueloss_fleet_ref(demand, w, cap, buf, dt):
+    """Fleet-batched reference: demand (F, B, TS, C), w (F, B, C, E), cap/buf
+    (F, B, E); every (fabric, block) scan starts from an empty queue.
+    Returns (drop_sum, load_sum), each (F, B, TS)."""
+    return jax.vmap(queueloss_batched_ref, in_axes=(0, 0, 0, 0, None))(
+        demand, w, cap, buf, dt)

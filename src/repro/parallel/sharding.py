@@ -67,6 +67,36 @@ def use_mesh(mesh: Mesh):
         set_active_mesh(prev)
 
 
+def fleet_mesh(devices=None) -> Mesh:
+    """1-D mesh over the visible devices with axis ``"fleet"``.
+
+    The fleet engine (:mod:`repro.core.fleet_engine`) shards its flattened
+    fabric×epoch batch axis over this mesh; with a single device the mesh is
+    still a valid ``shard_map`` target (the smoke-test configuration), it just
+    holds the whole batch on one shard.
+    """
+    import numpy as np
+
+    devices = jax.devices() if devices is None else list(devices)
+    return Mesh(np.asarray(devices), ("fleet",))
+
+
+def shard_leading(fn, mesh: Mesh):
+    """``shard_map`` a batched function over the leading axis of every input
+    and output, along ``mesh``'s first axis.
+
+    ``fn`` must be elementwise along its leading batch axis (e.g. a
+    ``jax.vmap``-wrapped per-element solve) so sharding it is a pure data
+    split — no collectives.  Callers pad the batch to a multiple of the axis
+    size.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    spec = P(mesh.axis_names[0])
+    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec,
+                     check_rep=False)
+
+
 def dp_axes(mesh: Mesh | None = None):
     mesh = mesh or _ACTIVE_MESH
     if mesh is not None and "pod" in mesh.axis_names:

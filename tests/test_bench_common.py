@@ -1,0 +1,96 @@
+"""Bench plumbing: the params-keyed result cache must never serve a result
+generated under different fleet/config parameters (the stale-SCALE bug), and
+the regression-gate helpers must bite on injected regressions."""
+
+import json
+
+import pytest
+
+import benchmarks.common as common
+from benchmarks.check_regression import SPECS, check
+
+
+@pytest.fixture()
+def results_dir(tmp_path, monkeypatch):
+    monkeypatch.setattr(common, "RESULTS", tmp_path)
+    return tmp_path
+
+
+def test_cached_recomputes_when_params_change(results_dir):
+    calls = []
+
+    def make(val):
+        def fn():
+            calls.append(val)
+            return {"value": val}
+        return fn
+
+    p1 = dict(n_fabrics=6, days=10.0)
+    p2 = dict(n_fabrics=6, days=4.0)  # same bench name, different params
+    assert common.cached("x", make(1), params=p1)["value"] == 1
+    # same params: served from cache, no recompute
+    assert common.cached("x", make(99), params=p1)["value"] == 1
+    # changed params: must NOT serve the stale result
+    assert common.cached("x", make(2), params=p2)["value"] == 2
+    # the original params still hit their own cache entry
+    assert common.cached("x", make(99), params=p1)["value"] == 1
+    assert calls == [1, 2]
+    assert len(list(results_dir.glob("x__*.json"))) == 2
+
+
+def test_cached_force_recomputes(results_dir):
+    p = dict(k=1)
+    assert common.cached("y", lambda: {"v": 1}, params=p)["v"] == 1
+    assert common.cached("y", lambda: {"v": 2}, params=p)["v"] == 1
+    assert common.cached("y", lambda: {"v": 2}, force=True, params=p)["v"] == 2
+
+
+def test_params_key_stable_and_order_insensitive():
+    a = common.params_key({"a": 1, "b": (2, 3)})
+    b = common.params_key({"b": (2, 3), "a": 1})
+    assert a == b
+    assert a != common.params_key({"a": 1, "b": (2, 4)})
+
+
+def test_calibrate_returns_positive_seconds():
+    assert 0.0 < common.calibrate(n=64, reps=2) < 60.0
+
+
+# ---- regression gate --------------------------------------------------------
+
+BASE_FLEET = {
+    "aggregate": {"fleet_warm_s": 10.0, "figures_s": 20.0,
+                  "max_parity_rel_delta": 1e-6,
+                  "mlu_improvement_vs_vlb": 0.5, "frac_gemini_feasible": 1.0},
+    "_wall_s": 30.0,
+    "_calibration_s": 1.0,
+}
+
+
+def test_check_passes_identity_and_fails_injected_regressions():
+    assert check("BENCH_fleet.json", BASE_FLEET, BASE_FLEET) == []
+    slow = json.loads(json.dumps(BASE_FLEET))
+    slow["aggregate"]["fleet_warm_s"] = 25.0  # 2.5x
+    assert check("BENCH_fleet.json", slow, BASE_FLEET)
+    bad = json.loads(json.dumps(BASE_FLEET))
+    bad["aggregate"]["max_parity_rel_delta"] = 0.05  # parity broke
+    assert check("BENCH_fleet.json", bad, BASE_FLEET)
+    worse = json.loads(json.dumps(BASE_FLEET))
+    worse["aggregate"]["mlu_improvement_vs_vlb"] = 0.1  # quality dropped
+    assert check("BENCH_fleet.json", worse, BASE_FLEET)
+
+
+def test_check_calibration_normalizes_slow_runners():
+    fresh = json.loads(json.dumps(BASE_FLEET))
+    fresh["aggregate"]["fleet_warm_s"] = 20.0  # 2x slower wall-clock...
+    fresh["aggregate"]["figures_s"] = 40.0
+    fresh["_wall_s"] = 60.0
+    fresh["_calibration_s"] = 2.0  # ...on a 2x slower machine
+    assert check("BENCH_fleet.json", fresh, BASE_FLEET) == []
+
+
+def test_specs_cover_all_gated_artifacts():
+    assert set(SPECS) == {"BENCH_engine.json", "BENCH_transition.json",
+                          "BENCH_fleet.json"}
+    for spec in SPECS.values():
+        assert spec["time"], "every gated bench needs a wall-time metric"

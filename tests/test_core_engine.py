@@ -39,6 +39,7 @@ def test_plan_matches_sequential_walk(small_trace):
 
 
 @pytest.mark.parametrize("strategy", [Strategy(False, True), Strategy(True, True)])
+@pytest.mark.slow
 def test_batched_matches_sequential_scipy(small_fabric, small_trace, strategy):
     """Same solves, same seeds, same scoring: the batched engine must agree
     with the sequential walk to ~1e-3 rel (observed: bit-exact) on the scipy
@@ -56,6 +57,7 @@ def test_batched_matches_sequential_scipy(small_fabric, small_trace, strategy):
     assert bat.transit_fraction == pytest.approx(seq.transit_fraction, rel=1e-6)
 
 
+@pytest.mark.slow
 def test_batched_pdhg_close_to_scipy_controller(small_fabric, small_trace):
     """Controller-level PDHG-vs-HiGHS cross-check: the batched first-order
     engine must land near the LP-exact sequential path on summary metrics."""

@@ -1,0 +1,251 @@
+"""Fleet-sharded execution layer: bucketing/padding helpers, fleet-vs-
+per-fabric parity on a mixed-shape fleet (padding masks exercised), the
+single-device shard_map smoke, and the fabric-batched scoring wrappers."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ControllerConfig, SolverConfig, Strategy, predict,
+                        run_controller)
+from repro.core.fleet import (FLEET_SPECS, commodity_slots, fleet_bucket_key,
+                              make_fabric, make_trace, pad_pods, scatter_pad)
+from repro.core.fleet_engine import FleetJob, predict_fleet, run_fleet
+
+CC = ControllerConfig(routing_interval_hours=12.0, topology_interval_days=3.0,
+                      aggregation_days=3.0, k_critical=4)
+SC = SolverConfig(stage1_method="scaled")
+P999 = ("p999_mlu", "p999_alu", "p999_olr", "p999_stretch")
+
+
+def _mixed_fleet(n=3, days=9.0):
+    """First n fleet specs with pairwise-distinct pod counts — the padded
+    layouts differ from every native layout, so padding masks are exercised."""
+    picks, seen = [], set()
+    for spec in FLEET_SPECS:
+        if spec.n_pods not in seen:
+            picks.append(spec)
+            seen.add(spec.n_pods)
+        if len(picks) == n:
+            break
+    out = []
+    for spec in picks:
+        fabric = make_fabric(spec)
+        out.append((fabric, make_trace(spec, fabric, days=days,
+                                       interval_minutes=120.0)))
+    return out
+
+
+# ---- bucketing + padding helpers --------------------------------------------
+
+def test_pad_pods_quantum():
+    assert pad_pods(6) == 8 and pad_pods(8) == 8 and pad_pods(9) == 12
+    assert pad_pods(3, quantum=1) == 3  # quantum 1: no padding at all
+    with pytest.raises(ValueError):
+        pad_pods(6, quantum=0)
+
+
+def test_commodity_slots_embedding_roundtrip():
+    """scatter_pad(commodity_slots) embeds order-preservingly: gathering the
+    slots back recovers the original array, everything else is zero."""
+    v, vp = 5, 8
+    slots = commodity_slots(v, vp)
+    assert slots.shape == (v * (v - 1),)
+    assert (np.diff(slots) > 0).all()  # order preserved
+    x = np.arange(v * (v - 1), dtype=float) + 1.0
+    padded = scatter_pad(x, slots, vp * (vp - 1))
+    np.testing.assert_array_equal(padded[slots], x)
+    mask = np.ones(vp * (vp - 1), bool)
+    mask[slots] = False
+    assert (padded[mask] == 0).all()
+    # identity when nothing is padded
+    np.testing.assert_array_equal(
+        scatter_pad(x, commodity_slots(v, v), v * (v - 1)), x)
+
+
+def test_fleet_bucket_key_groups_by_padded_shape():
+    fab6 = make_fabric(dataclasses.replace(FLEET_SPECS[0], n_pods=6))
+    fab8 = make_fabric(dataclasses.replace(FLEET_SPECS[1], n_pods=8))
+    fab9 = make_fabric(dataclasses.replace(FLEET_SPECS[3], n_pods=9))
+    tr = make_trace(FLEET_SPECS[0], fab6, days=4.0, interval_minutes=120.0)
+    k6 = fleet_bucket_key(fab6, CC, SC, tr)
+    k8 = fleet_bucket_key(fab8, CC, SC, tr)
+    k9 = fleet_bucket_key(fab9, CC, SC, tr)
+    assert k6 == k8 != k9  # 6 and 8 share the V=8 bucket, 9 pads to 12
+    # scoring config is part of the key — different backends never fuse
+    k6b = fleet_bucket_key(fab6, dataclasses.replace(CC, backend="pallas"),
+                           SC, tr)
+    assert k6b != k6
+
+
+# ---- fleet engine parity ----------------------------------------------------
+
+def test_run_fleet_scipy_reference_path_is_bit_exact(small_fabric, small_trace):
+    """Non-pdhg jobs take the per-fabric reference path — identical results."""
+    strat = Strategy(nonuniform=False, hedging=True)
+    cc = dataclasses.replace(CC, solver_backend="scipy")
+    ref = run_controller(small_fabric, small_trace, strat, cc, SC)
+    out = run_fleet([FleetJob(small_fabric, small_trace, strat, cc, SC)])[0]
+    np.testing.assert_array_equal(out.metrics.mlu, ref.metrics.mlu)
+    assert out.summary == ref.summary
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", [Strategy(False, True), Strategy(True, False)])
+def test_fleet_matches_per_fabric_controller_mixed_shapes(strategy):
+    """ISSUE 5 acceptance: per-fabric summaries from the fleet-sharded path
+    match the per-fabric controller within 1e-3 on a mixed-shape fleet (every
+    fabric solves in a padded layout)."""
+    fleet = _mixed_fleet(3)
+    cc = dataclasses.replace(CC, solver_backend="pdhg")
+    jobs = [FleetJob(f, t, strategy, cc, SC) for f, t in fleet]
+    batched = run_fleet(jobs)
+    for (fabric, trace), out in zip(fleet, batched):
+        ref = run_controller(fabric, trace, strategy, cc, SC)
+        assert out.n_routing_updates == ref.n_routing_updates
+        assert out.n_topology_updates == ref.n_topology_updates
+        assert out.metrics.mlu.shape == ref.metrics.mlu.shape
+        for k in P999:
+            assert out.summary[k] == pytest.approx(ref.summary[k], rel=1e-3,
+                                                   abs=1e-6), (fabric.name, k)
+        assert out.transit_fraction == pytest.approx(ref.transit_fraction,
+                                                     abs=1e-3)
+        np.testing.assert_array_equal(out.final_topology, ref.final_topology)
+
+
+@pytest.mark.slow
+def test_fleet_loss_tracking_is_paired_with_per_fabric(small_fabric,
+                                                       small_trace):
+    """Burst-loss tracking through the fleet path must stay paired with the
+    per-fabric controller: expansion runs on native-layout blocks with the
+    same seeds, so padding must not perturb the burst RNG.  Residual loss
+    differences can only enter through the routing weights (solver-tolerance
+    level, ~1e-5); a decoupled RNG stream would shift losses by O(1)."""
+    from repro.burst import BurstParams, LossConfig
+
+    from repro.core.traffic import Trace
+
+    loss = LossConfig(burst=BurstParams(rate=0.05, shape=1.6, scale=2.5,
+                                        clip=8.0), n_sub=4, buffer_ms=25.0,
+                      seed=3)
+    # scale demand into the saturating regime so the fluid queues actually
+    # drop — an all-zero loss trace would make the parity check vacuous
+    hot = Trace(small_trace.name, small_trace.demand * 6.0,
+                small_trace.interval_minutes, small_trace.n_pods)
+    cc = dataclasses.replace(CC, solver_backend="pdhg", loss=loss)
+    strat = Strategy(nonuniform=False, hedging=True)
+    ref = run_controller(small_fabric, hot, strat, cc, SC)
+    out = run_fleet([FleetJob(small_fabric, hot, strat, cc, SC)])[0]
+    assert ref.metrics.loss is not None and ref.metrics.loss.max() > 0
+    np.testing.assert_allclose(out.metrics.loss, ref.metrics.loss,
+                               rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_fleet_shard_map_smoke_single_device():
+    """The shard_map path must run (and agree with the unsharded fleet path)
+    on a single-device mesh — the CI stand-in for multi-device sharding."""
+    from repro.parallel.sharding import fleet_mesh
+
+    fleet = _mixed_fleet(2, days=6.0)
+    cc = dataclasses.replace(CC, solver_backend="pdhg")
+    strat = Strategy(nonuniform=False, hedging=True)
+    jobs = [FleetJob(f, t, strat, cc, SC) for f, t in fleet]
+    plain = run_fleet(jobs, mesh=None)
+    sharded = run_fleet(jobs, mesh=fleet_mesh())
+    for a, b in zip(plain, sharded):
+        for k in P999:
+            assert b.summary[k] == pytest.approx(a.summary[k], rel=1e-6,
+                                                 abs=1e-9), k
+
+
+@pytest.mark.slow
+def test_predict_fleet_matches_per_fabric_predict():
+    fleet = _mixed_fleet(2, days=6.0)
+    cc = dataclasses.replace(CC, solver_backend="pdhg")
+    preds = predict_fleet(fleet, cc, SC)
+    for (fabric, trace), pf in zip(fleet, preds):
+        ref = predict(fabric, trace, cc, SC)
+        assert pf.strategy.name == ref.strategy.name
+        for name, summary in ref.per_strategy.items():
+            for k in P999:
+                assert pf.per_strategy[name][k] == pytest.approx(
+                    summary[k], rel=1e-3, abs=1e-6), (fabric.name, name, k)
+
+
+# ---- fabric-batched scoring wrappers ----------------------------------------
+
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+def test_route_metrics_fleet_matches_batched_per_fabric(rng, backend):
+    """The fleet-fused scoring pass (one more leading axis) must reproduce
+    the per-fabric epoch-batched scoring, padding included."""
+    from repro.core.simulator import route_metrics_batched, route_metrics_fleet
+
+    c, e = 30, 30
+    blocks_fleet, w_fleet, caps_fleet = [], [], []
+    for f in range(3):
+        nb = 2 + f  # ragged block counts across fabrics
+        blocks = [rng.uniform(0.0, 2.0, size=(3 + 2 * b, c)) for b in range(nb)]
+        w = rng.uniform(0.0, 1.0, size=(nb, c, e))
+        caps = rng.uniform(5.0, 10.0, size=(nb, e))
+        caps[:, -3:] = 0.0  # dead links in every fabric
+        blocks_fleet.append(blocks)
+        w_fleet.append(w)
+        caps_fleet.append(caps)
+    fleet = route_metrics_fleet(blocks_fleet, w_fleet, caps_fleet,
+                                backend=backend)
+    for fi in range(3):
+        ref = route_metrics_batched(blocks_fleet[fi], w_fleet[fi],
+                                    caps_fleet[fi], backend=backend)
+        for name in ("mlu", "alu", "olr", "stretch"):
+            np.testing.assert_allclose(getattr(fleet[fi], name),
+                                       getattr(ref, name),
+                                       rtol=1e-5, atol=1e-6, err_msg=name)
+
+
+def test_interval_loss_fleet_matches_batched(rng):
+    """Fleet-fused burst loss must reproduce the per-fabric batched path
+    bit-for-bit on the numpy backend (same expansion seeds, same queue)."""
+    from repro.burst import (BurstParams, LossConfig, interval_loss_batched,
+                             interval_loss_fleet)
+
+    cfg = LossConfig(burst=BurstParams(rate=0.2, shape=1.6, scale=2.0,
+                                       clip=8.0), n_sub=4, buffer_ms=25.0)
+    c, e = 20, 20
+    blocks_fleet, w_fleet, caps_fleet, seeds_fleet = [], [], [], []
+    for f in range(2):
+        nb = 2 + f
+        blocks = [rng.uniform(0.0, 8.0, size=(4 + b, c)) for b in range(nb)]
+        blocks_fleet.append(blocks)
+        w_fleet.append(rng.uniform(0.0, 1.0, size=(nb, c, e)))
+        caps_fleet.append(rng.uniform(1.0, 4.0, size=(nb, e)))
+        seeds_fleet.append([100 * f + b for b in range(nb)])
+    fleet = interval_loss_fleet(blocks_fleet, w_fleet, caps_fleet, 60.0, cfg,
+                                seeds_fleet, backend="numpy")
+    for fi in range(2):
+        ref = interval_loss_batched(blocks_fleet[fi], w_fleet[fi],
+                                    caps_fleet[fi], 60.0, cfg,
+                                    seeds_fleet[fi], backend="numpy")
+        assert any(l.max() > 0 for l in ref)  # the scenario actually drops
+        for a, b in zip(fleet[fi], ref):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_queue_loss_fleet_matches_batched(rng):
+    from repro.kernels.queueloss import ops as qlops
+
+    f, b, ts, c, e = 2, 3, 10, 12, 12
+    demand = rng.uniform(0.0, 6.0, size=(f, b, ts, c))
+    w = rng.uniform(0.0, 1.0, size=(f, b, c, e))
+    cap = rng.uniform(1.0, 3.0, size=(f, b, e))
+    buf = 0.02 * cap
+    for backend in ("numpy", "jnp", "pallas"):
+        drop, tot = qlops.queue_loss_fleet(demand, w, cap, buf, 1.0,
+                                           backend=backend)
+        assert drop.shape == (f, b, ts)
+        for fi in range(f):
+            d_ref, t_ref = qlops.queue_loss_batched(
+                demand[fi], w[fi], cap[fi], buf[fi], 1.0, backend=backend)
+            np.testing.assert_allclose(drop[fi], d_ref, rtol=1e-5, atol=1e-4)
+            np.testing.assert_allclose(tot[fi], t_ref, rtol=1e-5, atol=1e-4)

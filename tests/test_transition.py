@@ -173,6 +173,7 @@ def test_evaluate_transition_none_when_identical(small_fabric, small_trace,
 
 
 @pytest.mark.parametrize("backend", ["scipy", "pdhg"])
+@pytest.mark.slow
 def test_score_stage_batch_stranded_stage_is_infinite(backend):
     """A drain stage that strands a commodity must score u = inf on BOTH
     backends — scipy's LP turns infeasible, while the PDHG operators treat
@@ -224,6 +225,7 @@ def test_transition_unset_is_legacy(small_fabric, small_trace):
 
 
 @pytest.mark.parametrize("engine", ["sequential", "batched"])
+@pytest.mark.slow
 def test_transition_scores_all_intervals_once(small_fabric, small_trace, engine):
     """Staged scoring must neither drop nor double-count intervals."""
     res = _run(small_fabric, small_trace, Strategy(True, True), engine=engine,
@@ -237,6 +239,7 @@ def test_transition_scores_all_intervals_once(small_fabric, small_trace, engine)
                for e in res.transition_log)
 
 
+@pytest.mark.slow
 def test_transition_engines_agree(small_fabric, small_trace):
     tc = dataclasses.replace(TC, decide=False, stage_intervals=2)
     seq = _run(small_fabric, small_trace, Strategy(True, True),
@@ -254,6 +257,7 @@ def test_transition_engines_agree(small_fabric, small_trace):
         assert a["applied"] == b["applied"]
 
 
+@pytest.mark.slow
 def test_high_hysteresis_skips_reconfigurations(small_fabric, small_trace):
     tc = dataclasses.replace(TC, hysteresis=50.0)
     res = _run(small_fabric, small_trace, Strategy(True, True), transition=tc)
@@ -267,6 +271,7 @@ def test_high_hysteresis_skips_reconfigurations(small_fabric, small_trace):
         for e in skipped)
 
 
+@pytest.mark.slow
 def test_instantaneous_keeps_decision_without_staging(small_fabric, small_trace):
     tc = dataclasses.replace(TC, decide=False, instantaneous=True)
     res = _run(small_fabric, small_trace, Strategy(True, True), transition=tc)
