@@ -32,6 +32,7 @@ import time
 import numpy as np
 
 from benchmarks.common import SCALE, cached
+from repro import obs
 from repro.core import ControllerConfig, SolverConfig, Strategy, run_controller
 from repro.core.fleet import FLEET_SPECS, make_fabric, make_trace
 
@@ -60,6 +61,7 @@ def _run(scale: str) -> dict:
     sc = SolverConfig(stage1_method="scaled")
     strat = Strategy(nonuniform=False, hedging=True)
     rows = []
+    stats = []
     for idx in p["fabric_indices"]:
         spec = FLEET_SPECS[idx]
         fabric = make_fabric(spec)
@@ -73,11 +75,12 @@ def _run(scale: str) -> dict:
         seq = run_controller(fabric, trace, strat, cc_seq, sc)
         t_seq = time.time() - t0
         t0 = time.time()
-        run_controller(fabric, trace, strat, cc_bat, sc)
+        cold = run_controller(fabric, trace, strat, cc_bat, sc)
         t_cold = time.time() - t0
         t0 = time.time()
         bat = run_controller(fabric, trace, strat, cc_bat, sc)
         t_warm = time.time() - t0
+        stats.append(bat.solver_stats)
         rows.append({
             "fabric": spec.name,
             "pods": fabric.n_pods,
@@ -88,6 +91,14 @@ def _run(scale: str) -> dict:
             "speedup_warm": round(t_seq / max(t_warm, 1e-9), 2),
             "seq_solver_s": round(seq.solver_seconds, 2),
             "batched_solver_s": round(bat.solver_seconds, 2),
+            # warm-run phase breakdown: the steady-state cost structure.  The
+            # cold breakdown is kept separately — its solve phase carries the
+            # one-off jit compile and must not be read as a solver regression.
+            "stage_times": bat.stage_times,
+            "stage_times_cold": cold.stage_times,
+            # per-epoch PDHG effort on the warm run (iters/gap per stage)
+            "pdhg": (bat.solver_stats.to_dict(per_epoch=True)
+                     if bat.solver_stats is not None else None),
             "p999_rel_delta": {k: round(_rel(bat.summary[k], seq.summary[k]), 4)
                                for k in METRICS},
             "seq_summary": {k: seq.summary[k] for k in METRICS},
@@ -96,6 +107,9 @@ def _run(scale: str) -> dict:
     tot_seq = sum(r["seq_scipy_s"] for r in rows)
     tot_warm = sum(r["batched_pdhg_warm_s"] for r in rows)
     tot_cold = sum(r["batched_pdhg_cold_s"] for r in rows)
+    merged = obs.SolverStats.merge(stats)
+    phase_s = {k: round(sum(r["stage_times"].get(k, 0.0) for r in rows), 4)
+               for k in ("plan", "anchor", "solve", "score", "transition")}
     agg = {
         "scale": scale,
         "n_fabrics": len(rows),
@@ -107,6 +121,11 @@ def _run(scale: str) -> dict:
         "solver_seconds_speedup": round(
             sum(r["seq_solver_s"] for r in rows)
             / max(sum(r["batched_solver_s"] for r in rows), 1e-9), 2),
+        # warm phase breakdown summed across fabrics (CI gates per-phase so a
+        # single-stage blow-up can't hide inside a flat total)
+        "phase_s": phase_s,
+        # fleet-wide PDHG convergence summary (per-epoch lists live in rows)
+        "pdhg": merged.to_dict(per_epoch=False) if merged is not None else None,
         "max_p999_rel_delta": {
             k: max(r["p999_rel_delta"][k] for r in rows) for k in METRICS},
     }
@@ -126,7 +145,7 @@ def main() -> None:
     import pathlib
     import time as _time
 
-    from benchmarks.common import calibrate
+    from benchmarks.common import finalize
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true",
@@ -134,12 +153,23 @@ def main() -> None:
     ap.add_argument("--force", action="store_true", help="ignore cached results")
     ap.add_argument("--json", type=str, default=None,
                     help="also write the result to this JSON file")
+    ap.add_argument("--trace", type=str, default=None, metavar="TRACE.jsonl",
+                    help="enable repro.obs tracing and export the span trace "
+                         "as JSONL here (plus a Perfetto-loadable "
+                         "*.chrome.json alongside)")
     args = ap.parse_args()
+    if args.trace:
+        obs.enable()
     t0 = _time.time()
     out = run(force=args.force, scale="tiny" if args.tiny else None)
-    # wall-time + machine-speed stamps for the CI regression gate
-    out["_wall_s"] = round(_time.time() - t0, 2)
-    out["_calibration_s"] = round(calibrate(), 4)
+    finalize(out, t0)
+    if args.trace:
+        trace_path = pathlib.Path(args.trace)
+        obs.export_jsonl(trace_path)
+        chrome = trace_path.with_suffix(".chrome.json")
+        obs.export_chrome_trace(chrome)
+        print(f"trace: {trace_path} ({len(obs.events())} events); "
+              f"Perfetto-loadable copy at {chrome}")
     print(json.dumps(out["aggregate"], indent=2))
     for r in out["rows"]:
         print(f"{r['fabric']} (V={r['pods']}, B={r['routing_epochs']}): "

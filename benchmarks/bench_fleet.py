@@ -191,6 +191,11 @@ def _run(scale: str) -> dict:
             "routing_updates": res.n_routing_updates,
             "topology_updates": res.n_topology_updates,
             "solver_seconds": round(res.solver_seconds, 1),
+            # per-job phase breakdown + PDHG convergence summary from the
+            # fleet engine (shared bucket costs apportioned per job)
+            "stage_times": res.stage_times,
+            "pdhg": (res.solver_stats.to_dict(per_epoch=False)
+                     if res.solver_stats is not None else None),
         })
 
     study = _speedup_study(scale)
@@ -211,6 +216,9 @@ def _run(scale: str) -> dict:
         "frac_gemini_feasible": float(np.mean(g <= 1)),
         "max_gemini_olr": float(max(r["gemini"]["olr"] for r in rows)),
         "max_gemini_stretch": float(max(r["gemini"]["stretch"] for r in rows)),
+        # phase breakdown of the figures sweep, summed over fleet jobs
+        "phase_s": {k: round(sum(r["stage_times"].get(k, 0.0) for r in rows), 4)
+                    for k in ("plan", "anchor", "solve", "score", "transition")},
     }
     agg.update(study)
     return {"rows": rows, "aggregate": agg}
@@ -229,7 +237,7 @@ def main() -> None:
     import json
     import pathlib
 
-    from benchmarks.common import calibrate
+    from benchmarks.common import finalize
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true",
@@ -240,9 +248,7 @@ def main() -> None:
     args = ap.parse_args()
     t0 = time.time()
     out = run(force=args.force, scale="tiny" if args.tiny else None)
-    # wall-time + machine-speed stamps for the CI regression gate
-    out["_wall_s"] = round(time.time() - t0, 2)
-    out["_calibration_s"] = round(calibrate(), 4)
+    finalize(out, t0)
     agg = out["aggregate"]
     print(json.dumps(agg, indent=2))
     for r in out["rows"]:

@@ -107,6 +107,9 @@ def _run(scale: str) -> dict:
             "p999_mlu_instant": round(instant.summary["p999_mlu"], 4),
             "p999_mlu_staged": round(staged.summary["p999_mlu"], 4),
             "p999_mlu_decide": round(decide.summary["p999_mlu"], 4),
+            # staged run's phase breakdown — the configuration where the
+            # transition machinery (drain schedule + stage scoring) is hot
+            "stage_times": staged.stage_times,
             "transition_log": log,
         })
     agg = {
@@ -137,7 +140,7 @@ def main() -> None:
     import pathlib
     import time as _time
 
-    from benchmarks.common import calibrate
+    from benchmarks.common import finalize
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true",
@@ -148,9 +151,7 @@ def main() -> None:
     args = ap.parse_args()
     t0 = _time.time()
     out = run(force=args.force, scale="tiny" if args.tiny else None)
-    # wall-time + machine-speed stamps for the CI regression gate
-    out["_wall_s"] = round(_time.time() - t0, 2)
-    out["_calibration_s"] = round(calibrate(), 4)
+    finalize(out, t0)
     print(json.dumps(out["aggregate"], indent=2))
     for r in out["rows"]:
         print(f"{r['fabric']} (V={r['pods']}): {r['n_transitions']} transitions, "

@@ -13,6 +13,11 @@ Rules per metric kind:
     does not trip the gate, and a faster one does not mask a regression).
     Sub-second baselines keep a small absolute floor — timer noise on a 0.1 s
     step is not a regression signal.
+  * **phase_time** — per-phase wall-times (the ``aggregate.phase_s`` stage
+    breakdown the engines report via ``repro.obs``): same rule as **time**
+    but with a smaller absolute floor, so a single stage blowing up (e.g.
+    scoring 3× slower while a faster solve hides it in the total) fails even
+    when the end-to-end wall-time budget still passes.
   * **lower** — quality metrics where bigger is worse (e.g. solver-parity
     deltas): fail when ``fresh > baseline + tol``.
   * **higher** — quality metrics where smaller is worse (e.g. skip counts,
@@ -43,6 +48,11 @@ SPECS = {
     "BENCH_engine.json": {
         "time": ["aggregate.batched_pdhg_warm_total_s",
                  "aggregate.batched_pdhg_cold_total_s"],
+        # warm-run stage breakdown: catches a single phase regressing even
+        # when another phase speeding up keeps the total inside budget
+        "phase_time": ["aggregate.phase_s.plan",
+                       "aggregate.phase_s.solve",
+                       "aggregate.phase_s.score"],
         # PDHG-vs-scipy summary drift is solver quality — must not grow
         "lower": [("aggregate.max_p999_rel_delta.p999_mlu", 0.02),
                   ("aggregate.max_p999_rel_delta.p999_alu", 0.02)],
@@ -59,6 +69,7 @@ SPECS = {
     },
     "BENCH_fleet.json": {
         "time": ["aggregate.fleet_warm_s", "aggregate.figures_s", "_wall_s"],
+        "phase_time": ["aggregate.phase_s.solve", "aggregate.phase_s.score"],
         "lower": [("aggregate.max_parity_rel_delta", 1e-4)],
         "higher": [("aggregate.mlu_improvement_vs_vlb", 0.02),
                    ("aggregate.frac_gemini_feasible", 0.0)],
@@ -66,6 +77,7 @@ SPECS = {
 }
 
 TIME_ABS_FLOOR_S = 1.0  # ignore sub-second jitter on tiny steps
+PHASE_ABS_FLOOR_S = 0.5  # phases are shorter than totals; keep some teeth
 
 
 def _get(d: dict, dotted: str):
@@ -90,17 +102,19 @@ def check(name: str, fresh: dict, base: dict,
     spec = SPECS[name]
     scale = _cal_scale(fresh, base)
     failures = []
-    for path in spec["time"]:
-        try:
-            f, b = float(_get(fresh, path)), float(_get(base, path))
-        except KeyError:
-            failures.append(f"{name}: missing time metric {path}")
-            continue
-        budget = max(b * scale * max_slowdown, TIME_ABS_FLOOR_S)
-        if f > budget:
-            failures.append(
-                f"{name}: {path} = {f:.2f}s exceeds budget {budget:.2f}s "
-                f"(baseline {b:.2f}s × cal {scale:.2f} × {max_slowdown})")
+    for kind, floor in (("time", TIME_ABS_FLOOR_S),
+                        ("phase_time", PHASE_ABS_FLOOR_S)):
+        for path in spec.get(kind, []):
+            try:
+                f, b = float(_get(fresh, path)), float(_get(base, path))
+            except KeyError:
+                failures.append(f"{name}: missing {kind} metric {path}")
+                continue
+            budget = max(b * scale * max_slowdown, floor)
+            if f > budget:
+                failures.append(
+                    f"{name}: {path} = {f:.2f}s exceeds budget {budget:.2f}s "
+                    f"(baseline {b:.2f}s × cal {scale:.2f} × {max_slowdown})")
     for path, tol in spec["lower"]:
         try:
             f, b = float(_get(fresh, path)), float(_get(base, path))
@@ -143,6 +157,17 @@ def _self_test(baseline_dir: pathlib.Path, max_slowdown: float) -> int:
         if not check(name, slow, base, max_slowdown):
             print(f"self-test FAIL: {name} accepts a 2x wall-time regression")
             ok = False
+        # a single phase regressing while every end-to-end total stays at
+        # baseline (the failure mode the per-phase gate exists for)
+        for path in SPECS[name].get("phase_time", []):
+            onephase = copy.deepcopy(base)
+            parent, leaf = path.rpartition(".")[::2]
+            node = _get(onephase, parent) if parent else onephase
+            node[leaf] = float(node[leaf]) * 2.0 + 2 * PHASE_ABS_FLOOR_S
+            if not check(name, onephase, base, max_slowdown):
+                print(f"self-test FAIL: {name} accepts a 2x regression "
+                      f"isolated to {path}")
+                ok = False
         bad = copy.deepcopy(base)
         degraded = False
         for path, tol in SPECS[name]["lower"]:

@@ -62,6 +62,41 @@ def cached(name: str, fn, force: bool = False, params=None):
     return out
 
 
+def provenance() -> dict:
+    """Toolchain/hardware stamp for bench JSONs.
+
+    Regression triage needs to know *what* produced a number before comparing
+    it: a jax upgrade or a different accelerator class explains a wall-time
+    shift that would otherwise read as a code regression.
+    """
+    out = {}
+    try:
+        import jax
+
+        dev = jax.devices()[0]
+        out["jax_version"] = jax.__version__
+        out["device_platform"] = dev.platform
+        out["device_kind"] = dev.device_kind
+        out["n_devices"] = jax.device_count()
+    except Exception:  # bench may run without jax importable
+        out["jax_version"] = None
+    return out
+
+
+def finalize(out: dict, t0: float) -> dict:
+    """Stamp the standard trailer every bench JSON carries.
+
+    ``_wall_s``/``_calibration_s`` feed the CI regression gate
+    (:mod:`benchmarks.check_regression`); ``_provenance`` records the
+    toolchain + device the numbers came from.  Call at the end of ``main()``
+    with the bench's start time.
+    """
+    out["_wall_s"] = round(time.time() - t0, 2)
+    out["_calibration_s"] = round(calibrate(), 4)
+    out["_provenance"] = provenance()
+    return out
+
+
 def calibrate(n: int = 384, reps: int = 6) -> float:
     """Machine-speed probe: seconds for a fixed numpy matmul workload.
 

@@ -31,6 +31,7 @@ import dataclasses
 
 import numpy as np
 
+from repro import obs
 from repro.burst import LossConfig
 from repro.core import clustering
 from repro.core.graph import Fabric, uniform_topology
@@ -87,6 +88,14 @@ class ControllerResult:
     n_skipped_topology: int = 0
     # one dict per evaluated transition (see TransitionEval.log_entry)
     transition_log: tuple = ()
+    # wall-time breakdown by controller phase.  All engines share the key
+    # schema plan / anchor / solve / score / transition; "anchor" is the
+    # anchor-solve share of "solve", and "transition" (gate evaluation) is
+    # part of "plan" — the other keys are disjoint.
+    stage_times: dict = dataclasses.field(default_factory=dict)
+    # repro.obs.SolverStats (per-epoch PDHG iterations / certified gaps /
+    # restarts); None on the scipy backend
+    solver_stats: object = None
 
 
 def _window(trace: Trace, end: int, n: int) -> np.ndarray:
@@ -124,6 +133,8 @@ def run_controller(
     n_skipped, transition_log = 0, []
     transit_mass, transit_n = 0.0, 0
     tc = cc.transition
+    phases = obs.PhaseTimes()
+    pdhg_raws: list = []
 
     sol: GeminiSolution | None = None
     n_realized: np.ndarray | None = None
@@ -132,15 +143,19 @@ def run_controller(
 
     fixed = Strategy(nonuniform=False, hedging=strategy.hedging)
     for start in range(agg, trace.n_intervals, route_step):
-        window = _window(trace, start, agg)
-        tms = clustering.critical_tms(window, k=cc.k_critical, seed=n_routing)
+        with phases("plan"):
+            window = _window(trace, start, agg)
+            tms = clustering.critical_tms(window, k=cc.k_critical,
+                                          seed=n_routing)
         staged = None  # TransitionEval whose drain stages score this epoch
         if strategy.nonuniform and (sol is None or start >= next_topo):
-            # full joint solve: new topology + routing
-            sol = solve(fabric, tms, strategy, sc, window_demand=window)
-            solver_s += sol.solve_seconds
-            cand = realize(fabric, sol.n_e)[0] if cc.realize_topology else sol.n_e
-            cand_cap = fabric.capacities(cand)
+            with phases("plan"):
+                # full joint solve: new topology + routing
+                sol = solve(fabric, tms, strategy, sc, window_demand=window)
+                solver_s += sol.solve_seconds
+                cand = (realize(fabric, sol.n_e)[0]
+                        if cc.realize_topology else sol.n_e)
+                cand_cap = fabric.capacities(cand)
             apply = True
             if tc is not None and n_realized is not None:
                 apply, staged, ev, ev_s = _transition_gate(
@@ -148,16 +163,22 @@ def run_controller(
                     delta=sol.delta, hedging=strategy.hedging,
                     horizon_intervals=topo_step)
                 solver_s += ev_s
+                phases.add("transition", ev_s)
+                phases.add("plan", ev_s)  # transition ⊆ plan (shared schema)
                 if ev is not None:
                     transition_log.append(ev.log_entry(start, apply))
             if apply:
                 n_realized, cap = cand, cand_cap
                 n_topology += 1
+                obs.event("controller.topology_applied", start=start)
             else:
                 n_skipped += 1
+                obs.event("controller.topology_skipped", start=start)
             next_topo = start + topo_step
             # routing must target the *realized* (integer) capacities
-            sol = _solve_routing_only(fabric, tms, fixed, sc, window, cap, cc)
+            with phases("solve"):
+                sol = _solve_routing_only(fabric, tms, fixed, sc, window,
+                                          cap, cc)
             solver_s += sol.solve_seconds
         else:
             if cap is None:
@@ -166,32 +187,45 @@ def run_controller(
                 n_realized = realize(fabric, n0)[0] if cc.realize_topology else n0
                 cap = fabric.capacities(n_realized)
             # routing-only re-solve on the current realized topology
-            sol = _solve_routing_only(fabric, tms, fixed, sc, window, cap, cc)
+            with phases("solve"):
+                sol = _solve_routing_only(fabric, tms, fixed, sc, window,
+                                          cap, cc)
             solver_s += sol.solve_seconds
+        if sol.pdhg_stats is not None:
+            pdhg_raws.append(sol.pdhg_stats)
+            phases.add("anchor", sol.pdhg_stats.get("anchor_seconds", 0.0))
         n_routing += 1
         transit_mass += sol.transit_fraction(paths)
         transit_n += 1
 
-        w = routing_weight_matrix(paths, sol.f)
-        block = trace.demand[start : start + route_step]
-        rem_lo, rem_seed = 0, (cc.loss.seed + start if cc.loss is not None
-                               else None)
-        if staged is not None:
-            stage_m, rem_lo, rem_seed = _score_stages(block, staged, cc,
-                                                      trace, start)
-            metrics = metrics.concat(stage_m)
-        # vary the burst seed per block (identical bursts in every block would
-        # collapse the p99.9 onto one replayed realization) while keeping it a
-        # pure function of (cc.loss.seed, start) — strategies walk the same
-        # starts, so comparisons stay paired under identical bursts
-        loss_cfg = (dataclasses.replace(cc.loss, seed=rem_seed)
-                    if cc.loss is not None else None)
-        if block.shape[0] - rem_lo > 0:
-            metrics = metrics.concat(
-                route_metrics(block[rem_lo:], w, cap, cc.overload_threshold,
-                              backend=cc.backend, loss_cfg=loss_cfg,
-                              interval_seconds=trace.interval_minutes * 60.0))
+        with phases("score"):
+            w = routing_weight_matrix(paths, sol.f)
+            block = trace.demand[start : start + route_step]
+            rem_lo, rem_seed = 0, (cc.loss.seed + start if cc.loss is not None
+                                   else None)
+            if staged is not None:
+                stage_m, rem_lo, rem_seed = _score_stages(block, staged, cc,
+                                                          trace, start)
+                metrics = metrics.concat(stage_m)
+            # vary the burst seed per block (identical bursts in every block
+            # would collapse the p99.9 onto one replayed realization) while
+            # keeping it a pure function of (cc.loss.seed, start) — strategies
+            # walk the same starts, so comparisons stay paired under identical
+            # bursts
+            loss_cfg = (dataclasses.replace(cc.loss, seed=rem_seed)
+                        if cc.loss is not None else None)
+            if block.shape[0] - rem_lo > 0:
+                metrics = metrics.concat(
+                    route_metrics(block[rem_lo:], w, cap,
+                                  cc.overload_threshold,
+                                  backend=cc.backend, loss_cfg=loss_cfg,
+                                  interval_seconds=trace.interval_minutes
+                                  * 60.0))
 
+    solver_stats = None
+    if pdhg_raws:
+        solver_stats = obs.SolverStats.from_pdhg(
+            pdhg_raws, cc.pdhg_max_iters, cc.pdhg_tol)
     return ControllerResult(
         strategy=strategy,
         metrics=metrics,
@@ -203,6 +237,8 @@ def run_controller(
         solver_seconds=solver_s,
         n_skipped_topology=n_skipped,
         transition_log=tuple(transition_log),
+        stage_times=phases.times,
+        solver_stats=solver_stats,
     )
 
 
@@ -218,20 +254,21 @@ def _transition_gate(fabric, tms, n_old, n_new, tc, cc, sc, *,
     transition-log bookkeeping (None when the change needs no jumper moves
     and is applied for free), and the evaluation wall-clock.
     """
-    import time
-
     from repro.transition import evaluate_transition, should_reconfigure
 
-    t0 = time.perf_counter()
-    ev = evaluate_transition(fabric, tms, n_old, n_new, tc, cc, sc,
-                             delta=delta, hedging=hedging,
-                             horizon_intervals=horizon_intervals)
+    with obs.timed("transition.evaluate") as t:
+        ev = evaluate_transition(fabric, tms, n_old, n_new, tc, cc, sc,
+                                 delta=delta, hedging=hedging,
+                                 horizon_intervals=horizon_intervals)
     if ev is None:
-        return True, None, None, time.perf_counter() - t0
+        return True, None, None, t.seconds
     apply = (not tc.decide) or should_reconfigure(ev.benefit, ev.disruption,
                                                   tc.hysteresis)
     staged = ev if apply and not tc.instantaneous else None
-    return apply, staged, ev, time.perf_counter() - t0
+    if staged is not None:
+        obs.event("transition.staged", n_stages=ev.n_stages,
+                  moves=ev.diff.total_moves)
+    return apply, staged, ev, t.seconds
 
 
 def _score_stages(block, ev, cc, trace, start):
@@ -267,34 +304,37 @@ def _solve_routing_only(fabric, tms, strategy, sc, window, capacities,
     PDHG solver (``"pdhg"``, :mod:`repro.core.jaxlp`) — the same per-epoch
     pipeline the batched engine runs as one vmapped call.
     """
-    import time
-
     from repro.core.lp import estimate_delta
 
     cc = cc or ControllerConfig(engine="sequential")
-    t0 = time.perf_counter()
-    delta = 0.0
-    if strategy.hedging:
-        delta = sc.delta if sc.delta is not None else estimate_delta(window, sc.delta_quantile)
-    if cc.solver_backend == "pdhg":
-        from repro.core.engine import _pad_tms, routing_solver_for
+    pdhg_stats = None
+    with obs.timed("controller.solve_routing",
+                   backend=cc.solver_backend) as t:
+        delta = 0.0
+        if strategy.hedging:
+            delta = (sc.delta if sc.delta is not None
+                     else estimate_delta(window, sc.delta_quantile))
+        if cc.solver_backend == "pdhg":
+            from repro.core.engine import _pad_tms, routing_solver_for
 
-        solver = routing_solver_for(fabric, cc.k_critical,
-                                    cc.pdhg_max_iters, cc.pdhg_tol)
-        out = solver.solve_routing_batch(
-            _pad_tms(np.asarray(tms, float), cc.k_critical)[None],
-            np.asarray(capacities, float)[None],
-            hedging=strategy.hedging, deltas=np.asarray([delta]),
-            skip_stage3=sc.skip_stage3)
-        f, u_star = out["f"][0], float(out["u_star"][0])
-        r_star = (None if out["r_star"] is None or not np.isfinite(out["r_star"][0])
-                  else float(out["r_star"][0]))
-    else:
-        from repro.core.engine import _solve_routing_scipy
+            solver = routing_solver_for(fabric, cc.k_critical,
+                                        cc.pdhg_max_iters, cc.pdhg_tol)
+            out = solver.solve_routing_batch(
+                _pad_tms(np.asarray(tms, float), cc.k_critical)[None],
+                np.asarray(capacities, float)[None],
+                hedging=strategy.hedging, deltas=np.asarray([delta]),
+                skip_stage3=sc.skip_stage3)
+            f, u_star = out["f"][0], float(out["u_star"][0])
+            r_star = (None if out["r_star"] is None
+                      or not np.isfinite(out["r_star"][0])
+                      else float(out["r_star"][0]))
+            pdhg_stats = out["stats"]
+        else:
+            from repro.core.engine import _solve_routing_scipy
 
-        f, u_star, r_star = _solve_routing_scipy(fabric, tms, sc, capacities,
-                                                 delta)
+            f, u_star, r_star = _solve_routing_scipy(fabric, tms, sc,
+                                                     capacities, delta)
     return GeminiSolution(
         strategy=strategy, fabric=fabric, n_e=np.zeros(fabric.n_trunks), f=f,
         u_star=u_star, r_star=r_star, delta=delta,
-        solve_seconds=time.perf_counter() - t0, stage_times={})
+        solve_seconds=t.seconds, pdhg_stats=pdhg_stats)

@@ -34,10 +34,10 @@ both parities and ``benchmarks/bench_engine.py`` measures the speedup.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import clustering
 from repro.core.graph import Fabric, uniform_topology
 from repro.core.lp import estimate_delta
@@ -185,6 +185,8 @@ class PlanArtifacts:
     transition_log: tuple
     n_realized: np.ndarray  # final realized topology (trunk counts)
     solver_seconds: float  # topology-solve + transition-eval wall clock
+    plan_seconds: float = 0.0  # whole plan-walk wall clock (phase "plan")
+    transition_seconds: float = 0.0  # gate-evaluation share of the plan walk
 
     def tms_padded(self, k: int) -> np.ndarray:
         """Critical TMs zero-padded to the static ``k`` rows, stacked (B, m, C)."""
@@ -197,56 +199,63 @@ def plan_artifacts(fabric: Fabric, trace: Trace, strategy: Strategy,
     epochs (joint topology solves run sequentially through scipy/HiGHS —
     the rare, daily events)."""
     plan = plan_controller(trace, cc, strategy.nonuniform)
-    solver_s = 0.0
+    solver_s, transition_s = 0.0, 0.0
     tc = cc.transition
     tms_list, deltas, caps_list, staging = [], [], [], []
     n_topology, n_skipped, transition_log = 0, 0, []
     cap: np.ndarray | None = None
     n_realized: np.ndarray | None = None
-    for ep in plan.epochs:
-        window = trace.demand[max(0, ep.start - plan.agg): ep.start]
-        tms = clustering.critical_tms(window, k=cc.k_critical, seed=ep.index)
-        delta = 0.0
-        if strategy.hedging:
-            delta = (sc.delta if sc.delta is not None
-                     else estimate_delta(window, sc.delta_quantile))
-        staged = None  # TransitionEval whose drain stages score this epoch
-        if ep.topo_solve:
-            sol = solve(fabric, tms, strategy, sc, window_demand=window)
-            solver_s += sol.solve_seconds
-            cand = (realize(fabric, sol.n_e)[0]
-                    if cc.realize_topology else sol.n_e)
-            cand_cap = fabric.capacities(cand)
-            apply = True
-            if tc is not None and n_realized is not None:
-                from repro.core.controller import _transition_gate
+    with obs.timed("engine.plan", fabric=fabric.name) as t_plan:
+        for ep in plan.epochs:
+            window = trace.demand[max(0, ep.start - plan.agg): ep.start]
+            tms = clustering.critical_tms(window, k=cc.k_critical,
+                                          seed=ep.index)
+            delta = 0.0
+            if strategy.hedging:
+                delta = (sc.delta if sc.delta is not None
+                         else estimate_delta(window, sc.delta_quantile))
+            staged = None  # TransitionEval whose drain stages score this epoch
+            if ep.topo_solve:
+                sol = solve(fabric, tms, strategy, sc, window_demand=window)
+                solver_s += sol.solve_seconds
+                cand = (realize(fabric, sol.n_e)[0]
+                        if cc.realize_topology else sol.n_e)
+                cand_cap = fabric.capacities(cand)
+                apply = True
+                if tc is not None and n_realized is not None:
+                    from repro.core.controller import _transition_gate
 
-                apply, staged, ev, ev_s = _transition_gate(
-                    fabric, tms, n_realized, cand, tc, cc, sc,
-                    delta=delta, hedging=strategy.hedging,
-                    horizon_intervals=plan.topo_step)
-                solver_s += ev_s
-                if ev is not None:
-                    transition_log.append(ev.log_entry(ep.start, apply))
-            if apply:
-                n_realized, cap = cand, cand_cap
-                n_topology += 1
-            else:
-                n_skipped += 1
-        elif cap is None:
-            n0 = uniform_topology(fabric)
-            n_realized = realize(fabric, n0)[0] if cc.realize_topology else n0
-            cap = fabric.capacities(n_realized)
-        tms_list.append(tms)
-        deltas.append(delta)
-        caps_list.append(cap)
-        staging.append(staged)
+                    apply, staged, ev, ev_s = _transition_gate(
+                        fabric, tms, n_realized, cand, tc, cc, sc,
+                        delta=delta, hedging=strategy.hedging,
+                        horizon_intervals=plan.topo_step)
+                    solver_s += ev_s
+                    transition_s += ev_s
+                    if ev is not None:
+                        transition_log.append(ev.log_entry(ep.start, apply))
+                if apply:
+                    n_realized, cap = cand, cand_cap
+                    n_topology += 1
+                    obs.event("controller.topology_applied", start=ep.start)
+                else:
+                    n_skipped += 1
+                    obs.event("controller.topology_skipped", start=ep.start)
+            elif cap is None:
+                n0 = uniform_topology(fabric)
+                n_realized = (realize(fabric, n0)[0]
+                              if cc.realize_topology else n0)
+                cap = fabric.capacities(n_realized)
+            tms_list.append(tms)
+            deltas.append(delta)
+            caps_list.append(cap)
+            staging.append(staged)
     return PlanArtifacts(
         plan=plan, tms=tuple(tms_list), deltas=np.asarray(deltas),
         caps=np.stack(caps_list), staging=tuple(staging),
         n_topology=n_topology, n_skipped=n_skipped,
         transition_log=tuple(transition_log),
-        n_realized=np.asarray(n_realized), solver_seconds=solver_s)
+        n_realized=np.asarray(n_realized), solver_seconds=solver_s,
+        plan_seconds=t_plan.seconds, transition_seconds=transition_s)
 
 
 def plan_score_blocks(trace: Trace, art: PlanArtifacts, w_b: np.ndarray,
@@ -304,33 +313,43 @@ def execute_plan(fabric: Fabric, trace: Trace, strategy: Strategy,
     fixed = Strategy(nonuniform=False, hedging=strategy.hedging)
     caps = art.caps
     solver_s = art.solver_seconds
+    phases = obs.PhaseTimes()
+    phases.add("plan", art.plan_seconds)
+    if art.transition_seconds:
+        phases.add("transition", art.transition_seconds)
+    solver_stats = None
 
     # ---- phase 2: batched routing-only solves -------------------------------
-    t0 = time.perf_counter()
-    if cc.solver_backend == "pdhg":
-        solver = routing_solver_for(fabric, cc.k_critical,
-                                    cc.pdhg_max_iters, cc.pdhg_tol)
-        out = solver.solve_routing_batch(
-            art.tms_padded(cc.k_critical), caps, hedging=fixed.hedging,
-            deltas=art.deltas, skip_stage3=sc.skip_stage3)
-        f_b = out["f"]
-    elif cc.solver_backend == "scipy":
-        f_b = np.stack([
-            _solve_routing_scipy(fabric, tms, sc, c, d)[0]
-            for tms, c, d in zip(art.tms, caps, art.deltas)])
-    else:
-        raise ValueError(f"unknown solver_backend {cc.solver_backend!r}")
-    solver_s += time.perf_counter() - t0
+    with phases("solve", "engine.solve") as t_solve:
+        if cc.solver_backend == "pdhg":
+            solver = routing_solver_for(fabric, cc.k_critical,
+                                        cc.pdhg_max_iters, cc.pdhg_tol)
+            out = solver.solve_routing_batch(
+                art.tms_padded(cc.k_critical), caps, hedging=fixed.hedging,
+                deltas=art.deltas, skip_stage3=sc.skip_stage3)
+            f_b = out["f"]
+            phases.add("anchor", out["stats"].get("anchor_seconds", 0.0))
+            solver_stats = obs.SolverStats.from_pdhg(
+                [out["stats"]], cc.pdhg_max_iters, cc.pdhg_tol)
+        elif cc.solver_backend == "scipy":
+            f_b = np.stack([
+                _solve_routing_scipy(fabric, tms, sc, c, d)[0]
+                for tms, c, d in zip(art.tms, caps, art.deltas)])
+        else:
+            raise ValueError(f"unknown solver_backend {cc.solver_backend!r}")
+    solver_s += t_solve.seconds
 
     # ---- phase 3: single-pass batched scoring -------------------------------
-    w_b = routing_weight_matrices(paths, f_b)
-    blocks, block_w, block_caps, loss_seeds = plan_score_blocks(
-        trace, art, w_b, caps, cc)
-    metrics = route_metrics_batched(
-        blocks, np.stack(block_w), np.stack(block_caps), cc.overload_threshold,
-        backend=cc.backend, loss_cfg=cc.loss,
-        loss_seeds=loss_seeds if cc.loss is not None else None,
-        interval_seconds=trace.interval_minutes * 60.0)
+    with phases("score", "engine.score"):
+        w_b = routing_weight_matrices(paths, f_b)
+        blocks, block_w, block_caps, loss_seeds = plan_score_blocks(
+            trace, art, w_b, caps, cc)
+        metrics = route_metrics_batched(
+            blocks, np.stack(block_w), np.stack(block_caps),
+            cc.overload_threshold,
+            backend=cc.backend, loss_cfg=cc.loss,
+            loss_seeds=loss_seeds if cc.loss is not None else None,
+            interval_seconds=trace.interval_minutes * 60.0)
 
     return ControllerResult(
         strategy=strategy,
@@ -343,6 +362,8 @@ def execute_plan(fabric: Fabric, trace: Trace, strategy: Strategy,
         solver_seconds=solver_s,
         n_skipped_topology=art.n_skipped,
         transition_log=art.transition_log,
+        stage_times=phases.times,
+        solver_stats=solver_stats,
     )
 
 

@@ -146,8 +146,7 @@ def run_fleet(jobs, *, pod_quantum: int = 4, mesh="auto") -> list:
 
 def _run_bucket(key, idxs, resolved, arts, results, mesh):
     """Phases 2–3 for one bucket: fleet-wide PDHG batch + fused scoring."""
-    import time
-
+    from repro import obs
     from repro.core.controller import ControllerResult
 
     vp, m, max_iters, tol, skip_stage3 = key[:5]
@@ -156,80 +155,100 @@ def _run_bucket(key, idxs, resolved, arts, results, mesh):
     paths_p = build_paths(vp)
 
     # ---- phase 2: stack plan artifacts onto the flattened batch axis --------
-    t0 = time.perf_counter()
-    tms_n, caps_n, valid_n, deltas_n = [], [], [], []
-    anchor_elems, anchor_of, spans = [], [], []
-    slots_of, caps_p_of = {}, {}  # per-job embeddings, reused by scoring
-    hedging = False
-    n = 0
-    for i in idxs:
-        j, cc, sc = resolved[i]
-        art = arts[i]
-        slots = commodity_slots(j.fabric.n_pods, vp)
-        caps_p = scatter_pad(art.caps, slots, cp, axis=1)
-        slots_of[i], caps_p_of[i] = slots, caps_p
-        b = art.plan.n_routing
-        tms_n.append(scatter_pad(art.tms_padded(m), slots, cp, axis=2))
-        caps_n.append(caps_p)
-        valid = solver.valid_for_pods(j.fabric.n_pods)
-        valid_n.append(np.broadcast_to(valid, (b,) + valid.shape))
-        deltas_n.append(art.deltas)
-        anchor_of.extend([len(anchor_elems)] * b)
-        anchor_elems.append(n + b // 2)  # the per-fabric anchor epoch
-        hedging = hedging or bool(j.strategy.hedging)
-        spans.append((n, n + b))
-        n += b
-    out = solver.solve_routing_fleet(
-        np.concatenate(tms_n), np.concatenate(caps_n),
-        np.concatenate(valid_n), np.asarray(anchor_elems),
-        np.asarray(anchor_of), hedging=hedging,
-        deltas=np.concatenate(deltas_n), skip_stage3=skip_stage3, mesh=mesh)
-    solve_s = time.perf_counter() - t0
+    with obs.timed("fleet.solve", bucket_pods=vp, n_jobs=len(idxs)) as t_solve:
+        tms_n, caps_n, valid_n, deltas_n = [], [], [], []
+        anchor_elems, anchor_of, spans = [], [], []
+        slots_of, caps_p_of = {}, {}  # per-job embeddings, reused by scoring
+        hedging = False
+        n = 0
+        for i in idxs:
+            j, cc, sc = resolved[i]
+            art = arts[i]
+            slots = commodity_slots(j.fabric.n_pods, vp)
+            caps_p = scatter_pad(art.caps, slots, cp, axis=1)
+            slots_of[i], caps_p_of[i] = slots, caps_p
+            b = art.plan.n_routing
+            tms_n.append(scatter_pad(art.tms_padded(m), slots, cp, axis=2))
+            caps_n.append(caps_p)
+            valid = solver.valid_for_pods(j.fabric.n_pods)
+            valid_n.append(np.broadcast_to(valid, (b,) + valid.shape))
+            deltas_n.append(art.deltas)
+            anchor_of.extend([len(anchor_elems)] * b)
+            anchor_elems.append(n + b // 2)  # the per-fabric anchor epoch
+            hedging = hedging or bool(j.strategy.hedging)
+            spans.append((n, n + b))
+            n += b
+        out = solver.solve_routing_fleet(
+            np.concatenate(tms_n), np.concatenate(caps_n),
+            np.concatenate(valid_n), np.asarray(anchor_elems),
+            np.asarray(anchor_of), hedging=hedging,
+            deltas=np.concatenate(deltas_n), skip_stage3=skip_stage3,
+            mesh=mesh)
+    solve_s = t_solve.seconds
     f_n = out["f"]  # (N, P_padded); zero mass on padded pods by construction
+    # per-job telemetry: slice the fleet-wide stats along the flattened batch
+    # axis; the bucket's anchor time and solve wall-clock are shared costs,
+    # apportioned evenly across jobs (matching solver_seconds semantics)
+    anchor_share = out["stats"].get("anchor_seconds", 0.0) / len(idxs)
+    stats_of = {
+        i: obs.SolverStats.from_pdhg(
+            [obs.slice_raw_stats(out["stats"], lo, hi, anchor_share)],
+            max_iters, tol)
+        for i, (lo, hi) in zip(idxs, spans)}
 
     # ---- phase 3: one fused scoring pass over the whole bucket --------------
-    cc0 = resolved[idxs[0]][1]  # scoring config is part of the bucket key
-    blocks_fleet, w_fleet, caps_fleet, seeds_fleet = [], [], [], []
-    native_blocks_fleet, slots_fleet = [], []  # burst expansion needs these
-    f_items, w_items = [], []
-    for i, (lo, hi) in zip(idxs, spans):
-        j, cc, sc = resolved[i]
-        art = arts[i]
-        slots, caps_p = slots_of[i], caps_p_of[i]
-        f_i = f_n[lo:hi]
-        w_b = routing_weight_matrices(paths_p, f_i)  # (B, Cp, Ep)
-        art_p = art
-        if any(ev is not None for ev in art.staging):
-            # staged epochs score under padded stage weights/capacities too
-            art_p = dataclasses.replace(art, staging=tuple(
-                None if ev is None else dataclasses.replace(
-                    ev,
-                    stage_w=scatter_pad(scatter_pad(ev.stage_w, slots, cp,
-                                                    axis=1), slots, cp, axis=2),
-                    stage_caps=scatter_pad(ev.stage_caps, slots, cp, axis=1))
-                for ev in art.staging))
-        blocks, block_w, block_caps, loss_seeds = plan_score_blocks(
-            j.trace, art_p, w_b, caps_p, cc)
-        blocks_fleet.append([scatter_pad(np.asarray(bl, np.float64), slots,
-                                         cp, axis=1) for bl in blocks])
-        native_blocks_fleet.append(blocks)
-        slots_fleet.append(slots)
-        w_fleet.append(np.stack(block_w))
-        caps_fleet.append(np.stack(block_caps))
-        seeds_fleet.append(loss_seeds)
-        f_items.append(f_i)
-        w_items.append(w_b)
-    metrics_fleet = route_metrics_fleet(
-        blocks_fleet, w_fleet, caps_fleet, cc0.overload_threshold,
-        backend=cc0.backend, loss_cfg=cc0.loss,
-        loss_seeds_fleet=seeds_fleet if cc0.loss is not None else None,
-        interval_seconds=key[-1] * 60.0,
-        loss_blocks_fleet=native_blocks_fleet, loss_slots_fleet=slots_fleet)
+    with obs.timed("fleet.score", bucket_pods=vp, n_jobs=len(idxs)) as t_score:
+        cc0 = resolved[idxs[0]][1]  # scoring config is part of the bucket key
+        blocks_fleet, w_fleet, caps_fleet, seeds_fleet = [], [], [], []
+        native_blocks_fleet, slots_fleet = [], []  # burst expansion needs these
+        f_items, w_items = [], []
+        for i, (lo, hi) in zip(idxs, spans):
+            j, cc, sc = resolved[i]
+            art = arts[i]
+            slots, caps_p = slots_of[i], caps_p_of[i]
+            f_i = f_n[lo:hi]
+            w_b = routing_weight_matrices(paths_p, f_i)  # (B, Cp, Ep)
+            art_p = art
+            if any(ev is not None for ev in art.staging):
+                # staged epochs score under padded stage weights/capacities too
+                art_p = dataclasses.replace(art, staging=tuple(
+                    None if ev is None else dataclasses.replace(
+                        ev,
+                        stage_w=scatter_pad(scatter_pad(ev.stage_w, slots, cp,
+                                                        axis=1),
+                                            slots, cp, axis=2),
+                        stage_caps=scatter_pad(ev.stage_caps, slots, cp,
+                                               axis=1))
+                    for ev in art.staging))
+            blocks, block_w, block_caps, loss_seeds = plan_score_blocks(
+                j.trace, art_p, w_b, caps_p, cc)
+            blocks_fleet.append([scatter_pad(np.asarray(bl, np.float64), slots,
+                                             cp, axis=1) for bl in blocks])
+            native_blocks_fleet.append(blocks)
+            slots_fleet.append(slots)
+            w_fleet.append(np.stack(block_w))
+            caps_fleet.append(np.stack(block_caps))
+            seeds_fleet.append(loss_seeds)
+            f_items.append(f_i)
+            w_items.append(w_b)
+        metrics_fleet = route_metrics_fleet(
+            blocks_fleet, w_fleet, caps_fleet, cc0.overload_threshold,
+            backend=cc0.backend, loss_cfg=cc0.loss,
+            loss_seeds_fleet=seeds_fleet if cc0.loss is not None else None,
+            interval_seconds=key[-1] * 60.0,
+            loss_blocks_fleet=native_blocks_fleet, loss_slots_fleet=slots_fleet)
 
     for pos, i in enumerate(idxs):
         j, cc, sc = resolved[i]
         art = arts[i]
         metrics = metrics_fleet[pos]
+        phases = obs.PhaseTimes()
+        phases.add("plan", art.plan_seconds)
+        if art.transition_seconds:
+            phases.add("transition", art.transition_seconds)
+        phases.add("solve", solve_s / len(idxs))
+        phases.add("anchor", anchor_share)
+        phases.add("score", t_score.seconds / len(idxs))
         results[i] = ControllerResult(
             strategy=j.strategy,
             metrics=metrics,
@@ -241,6 +260,8 @@ def _run_bucket(key, idxs, resolved, arts, results, mesh):
             solver_seconds=art.solver_seconds + solve_s / len(idxs),
             n_skipped_topology=art.n_skipped,
             transition_log=art.transition_log,
+            stage_times=phases.times,
+            solver_stats=stats_of[i],
         )
 
 
@@ -256,6 +277,7 @@ def predict_fleet(fleet, cc=None, sc=None, cushion: float = 0.05,
 
     Returns a list of :class:`~repro.core.predictor.Prediction`, in order.
     """
+    from repro import obs
     from repro.core.predictor import Prediction, pick_best
 
     jobs = [FleetJob(fabric, trace, strat, cc, sc)
@@ -268,6 +290,8 @@ def predict_fleet(fleet, cc=None, sc=None, cushion: float = 0.05,
                for si in range(k)}
         choice = pick_best(per, cushion, objective=objective)
         by_name = {s.name: s for s in strategies}
+        obs.event("predictor.strategy_choice", fabric=fabric.name,
+                  strategy=choice, hedging=by_name[choice].hedging)
         preds.append(Prediction(fabric=fabric.name, strategy=by_name[choice],
                                 per_strategy=per, cushion=cushion))
     return preds

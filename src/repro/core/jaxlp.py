@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.graph import Fabric, directed_edge_index
 from repro.core.paths import PathSet, build_paths
 
@@ -316,11 +317,12 @@ class JaxRoutingSolver:
         sig = tau
 
         def cond(s):
-            return jnp.logical_and(s[-3] < self.max_iters,
-                                   jnp.logical_not(s[-2]))
+            # state: (f, y, fa, ya, k, it, done, last, gap)
+            return jnp.logical_and(s[5] < self.max_iters,
+                                   jnp.logical_not(s[6]))
 
         def body(s):
-            f, y, fa, ya, k, it, done, last = s
+            f, y, fa, ya, k, it, done, last, gap = s
             g = self._util_adj(y, d3, ic)
             f_h = self._proj_f(f - tau * g, valid)
             fb = 2.0 * f_h - f
@@ -330,24 +332,25 @@ class JaxRoutingSolver:
                 [(f, f_h), (y, y_h)], [fa, ya], k)
             it = it + 1
 
-            def check(last):
+            def check(op):
                 # exact duality gap of the matrix game: primal = max util of
                 # f; dual lower bound = min_f' <y, U f'> (closed form).
                 obj = self._util(f, d3, ic).max()
                 lb = self._dual_min(self._util_adj(y, d3, ic), valid)
                 gap_ok = obj - lb <= self.tol * jnp.maximum(obj, 1e-6)
-                return gap_ok, obj
+                rel = (obj - lb) / jnp.maximum(obj, 1e-6)
+                return gap_ok, obj, rel
 
-            done, last = jax.lax.cond(
+            done, last, gap = jax.lax.cond(
                 it % self.check_every == 0, check,
-                lambda last: (jnp.asarray(False), last), last)
-            return f, y, fa, ya, k, it, done, last
+                lambda op: (jnp.asarray(False),) + op, (last, gap))
+            return f, y, fa, ya, k, it, done, last, gap
 
         big = jnp.asarray(jnp.inf, d3.dtype)
-        f, y, fa, ya, k, it, done, last = jax.lax.while_loop(
+        f, y, fa, ya, k, it, done, last, gap = jax.lax.while_loop(
             cond, body, (f0, y0, f0, y0, jnp.asarray(0.0, d3.dtype),
-                         jnp.int32(0), jnp.asarray(False), big))
-        return f, self._util(f, d3, ic).max(), it, y
+                         jnp.int32(0), jnp.asarray(False), big, big))
+        return f, self._util(f, d3, ic).max(), it, y, gap
 
     @functools.partial(jax.jit, static_argnums=0)
     def _solve_mlu(self, d3, ic, valid):
@@ -367,9 +370,9 @@ class JaxRoutingSolver:
         return jnp.broadcast_to(self.valid, (b,) + self.valid.shape)
 
     def solve_mlu(self, tms: np.ndarray, capacities: np.ndarray):
-        f3, u, it, _ = self._solve_mlu(self._dense_tms(tms),
-                                       self._dense_inv_cap(capacities),
-                                       self.valid)
+        f3, u, it, _, _ = self._solve_mlu(self._dense_tms(tms),
+                                          self._dense_inv_cap(capacities),
+                                          self.valid)
         self.last_iters = int(it)
         return self._flat_f(f3), float(u)
 
@@ -377,7 +380,8 @@ class JaxRoutingSolver:
         """Batched stage 1: tms (B, m, C), capacities (B, E) → (f (B, P), u (B,))."""
         d3 = jnp.stack([self._dense_tms(t) for t in tms])
         ic = jnp.stack([self._dense_inv_cap(c) for c in capacities])
-        f3, u, _, _ = self._solve_mlu_batch(d3, ic, self._tile_valid(d3.shape[0]))
+        f3, u, _, _, _ = self._solve_mlu_batch(d3, ic,
+                                               self._tile_valid(d3.shape[0]))
         return self._flat_f(np.asarray(f3)), np.asarray(u, np.float64)
 
     # ---- stage 2: min r  ≡  min_f max(δ f / C) s.t. U(f) ≤ u* ---------------
@@ -408,11 +412,12 @@ class JaxRoutingSolver:
             return jnp.stack([delta * f3 * ic0, delta * f3 * ic1], axis=-1)
 
         def cond(s):
-            return jnp.logical_and(s[-3] < self.max_iters,
-                                   jnp.logical_not(s[-2]))
+            # state: (f, y, z, fa, ya, za, k, it, done, last, gap)
+            return jnp.logical_and(s[7] < self.max_iters,
+                                   jnp.logical_not(s[8]))
 
         def body(s):
-            f, y, z, fa, ya, za, k, it, done, last = s
+            f, y, z, fa, ya, za, k, it, done, last, gap = s
             gf = (self._util_adj(y, d3, ic)
                   + delta * (z[..., 0] * ic0 + z[..., 1] * ic1))
             f_h = self._proj_f(f - tau * gf, valid)
@@ -424,12 +429,13 @@ class JaxRoutingSolver:
                 [(f, f_h), (y, y_h), (z, z_h)], [fa, ya, za], k)
             it = it + 1
 
-            def check(last):
+            def check(op):
                 # Lagrangian dual lower bound: d(y, z) = -u*·Σy + Σ_c min_k
                 # [Uᵀy + δ(z·ic)].  The bound certifies fast exits when tight;
                 # the risk objective is often minuscule (δ/C units), where the
                 # last-iterate bound oscillates — an objective-stall test at a
                 # 10·tol relative threshold covers that regime.
+                last = op[0]
                 obj = risk_of(f).max()
                 u_chk = self._util(f, d3, ic).max()
                 coeff = (self._util_adj(y, d3, ic)
@@ -439,18 +445,22 @@ class JaxRoutingSolver:
                 stall = jnp.abs(obj - last) <= 10.0 * self.tol * jnp.maximum(
                     obj, 1e-9)
                 feas = u_chk <= u_star * (1.0 + 2.0 * self.tol) + 1e-9
-                return jnp.logical_and(jnp.logical_or(gap_ok, stall), feas), obj
+                rel = (obj - lb) / jnp.maximum(obj, 1e-9)
+                return (jnp.logical_and(jnp.logical_or(gap_ok, stall), feas),
+                        obj, rel)
 
-            done, last = jax.lax.cond(
+            done, last, gap = jax.lax.cond(
                 it % self.check_every == 0, check,
-                lambda last: (jnp.asarray(False), last), last)
-            return f, y, z, fa, ya, za, k, it, done, last
+                lambda op: (jnp.asarray(False),) + op, (last, gap))
+            return f, y, z, fa, ya, za, k, it, done, last, gap
 
         big = jnp.asarray(jnp.inf, d3.dtype)
         state = (f0, y0, z0, f0, y0, z0, jnp.asarray(0.0, d3.dtype),
-                 jnp.int32(0), jnp.asarray(False), big)
-        f, y, z = jax.lax.while_loop(cond, body, state)[:3]
-        return f, risk_of(f).max(), self._util(f, d3, ic).max(), y, z
+                 jnp.int32(0), jnp.asarray(False), big, big)
+        out = jax.lax.while_loop(cond, body, state)
+        f, y, z = out[:3]
+        it, gap = out[7], out[10]
+        return f, risk_of(f).max(), self._util(f, d3, ic).max(), y, z, it, gap
 
     @functools.partial(jax.jit, static_argnums=0)
     def _solve_risk(self, d3, ic, valid, u_star, delta):
@@ -467,10 +477,11 @@ class JaxRoutingSolver:
         return jax.vmap(self._risk_core)(d3, ic, valid, u_star, delta, f0, y0, z0)
 
     def solve_risk(self, tms, capacities, u_star, delta):
-        f3, r, u, _, _ = self._solve_risk(self._dense_tms(tms),
-                                          self._dense_inv_cap(capacities),
-                                          self.valid,
-                                          jnp.float32(u_star), jnp.float32(delta))
+        f3, r, u = self._solve_risk(self._dense_tms(tms),
+                                    self._dense_inv_cap(capacities),
+                                    self.valid,
+                                    jnp.float32(u_star),
+                                    jnp.float32(delta))[:3]
         return self._flat_f(f3), float(r), float(u)
 
     # ---- stage 3: min stretch s.t. U(f) ≤ u*, risk ≤ r* ---------------------
@@ -492,11 +503,12 @@ class JaxRoutingSolver:
         f0 = _capped_simplex_rows(f_init, ub, valid)  # risk-feasible start
 
         def cond(s):
-            return jnp.logical_and(s[-3] < self.max_iters,
-                                   jnp.logical_not(s[-2]))
+            # state: (f, y, fa, ya, k, it, done, last, gap)
+            return jnp.logical_and(s[5] < self.max_iters,
+                                   jnp.logical_not(s[6]))
 
         def body(s):
-            f, y, fa, ya, k, it, done, last = s
+            f, y, fa, ya, k, it, done, last, gap = s
             gf = cost + self._util_adj(y, d3, ic)
             f_h = _capped_simplex_rows(f - tau * gf, ub, valid)
             fb = 2.0 * f_h - f
@@ -505,11 +517,12 @@ class JaxRoutingSolver:
                                                 [fa, ya], k)
             it = it + 1
 
-            def check(last):
+            def check(op):
                 # dual lower bound: -u*·Σy + Σ_c min_k [cost + Uᵀy] (the
                 # uncapped min is a valid, slightly loose bound); objective
                 # stall covers the oscillating-bound regime.  Risk is exact
                 # by construction; only the MLU budget needs checking.
+                last = op[0]
                 obj = (cost * f).sum()
                 u_chk = self._util(f, d3, ic).max()
                 coeff = cost + self._util_adj(y, d3, ic)
@@ -518,18 +531,20 @@ class JaxRoutingSolver:
                 stall = jnp.abs(obj - last) <= 10.0 * self.tol * jnp.maximum(
                     jnp.abs(obj), 1e-9)
                 feas = u_chk <= u_star * (1.0 + 2.0 * self.tol) + 1e-9
-                return jnp.logical_and(jnp.logical_or(gap_ok, stall), feas), obj
+                rel = (obj - lb) / jnp.maximum(jnp.abs(obj), 1e-9)
+                return (jnp.logical_and(jnp.logical_or(gap_ok, stall), feas),
+                        obj, rel)
 
-            done, last = jax.lax.cond(
+            done, last, gap = jax.lax.cond(
                 it % self.check_every == 0, check,
-                lambda last: (jnp.asarray(False), last), last)
-            return f, y, fa, ya, k, it, done, last
+                lambda op: (jnp.asarray(False),) + op, (last, gap))
+            return f, y, fa, ya, k, it, done, last, gap
 
         big = jnp.asarray(jnp.inf, d3.dtype)
         state = (f0, y0, f0, y0, jnp.asarray(0.0, d3.dtype),
-                 jnp.int32(0), jnp.asarray(False), big)
+                 jnp.int32(0), jnp.asarray(False), big, big)
         out = jax.lax.while_loop(cond, body, state)
-        return out[0], out[1]
+        return out[0], out[1], out[5], out[8]
 
     def _stretch_inits(self, d3):
         return (jnp.zeros((self.m, self.V, self.V), d3.dtype),)
@@ -557,8 +572,8 @@ class JaxRoutingSolver:
         ic = self._dense_inv_cap(capacities)
         r = jnp.float32(r_star if r_star is not None else 1e9)
         dl = jnp.float32(delta if (r_star is not None and delta) else 0.0)
-        f3, _ = self._solve_stretch(d3, ic, self.valid, jnp.float32(u_star),
-                                    r, dl, self._f_uniform(self.valid))
+        f3 = self._solve_stretch(d3, ic, self.valid, jnp.float32(u_star),
+                                 r, dl, self._f_uniform(self.valid))[0]
         return self._flat_f(f3)
 
     # ---- full routing pipeline, batched over epochs -------------------------
@@ -581,33 +596,50 @@ class JaxRoutingSolver:
           deltas: (B,) burst sizes (ignored unless ``hedging``).
           skip_stage3: skip the stretch-minimization stage.
 
-        Returns dict with ``f`` (B, P), ``u_star`` (B,), ``r_star`` (B,) or None.
+        Returns dict with ``f`` (B, P), ``u_star`` (B,), ``r_star`` (B,) or
+        None, and ``stats`` — per-epoch PDHG telemetry per stage (iteration
+        counts, final certified relative gaps, Halpern restart counts; stage 2
+        carries an ``active`` mask for the elements that actually hedge).
+        The telemetry is always part of the jitted programs' outputs, so
+        enabling/disabling tracing cannot retrace or perturb the solve.
         """
         b = tms.shape[0]
         d3 = jnp.stack([self._dense_tms(t) for t in tms])
         ic = jnp.stack([self._dense_inv_cap(c) for c in capacities])
         a = b // 2  # anchor epoch
         valid_b = self._tile_valid(b)
+        anchor_s = 0.0
 
         def tile(x):
             return jnp.broadcast_to(x[None], (b,) + x.shape)
 
-        f_a, _, _, y_a = self._solve_mlu(d3[a], ic[a], self.valid)
-        f3, u, _, _ = self._solve_mlu_batch_warm(d3, ic, valid_b,
-                                                 tile(f_a), tile(y_a))
+        with obs.timed("jaxlp.anchor", stage="mlu") as t:
+            f_a, _, _, y_a, _ = jax.block_until_ready(
+                self._solve_mlu(d3[a], ic[a], self.valid))
+        anchor_s += t.seconds
+        with obs.span("jaxlp.stage1", b=b):
+            f3, u, it1, _, gap1 = self._solve_mlu_batch_warm(
+                d3, ic, valid_b, tile(f_a), tile(y_a))
         u = jnp.asarray(u)
         u_budget = u * 1.005 + 1e-9
+        stats = {"stage1": self._stage_stats(it1, gap1)}
         r_star = None
         if hedging:
             dl = jnp.asarray(np.asarray(deltas, np.float32))
-            f2_a, _, _, y2_a, z2_a = self._solve_risk(
-                d3[a], ic[a], self.valid, u_budget[a], dl[a])
-            f3r, r, _, _, _ = self._solve_risk_batch_warm(
-                d3, ic, valid_b, u_budget, dl,
-                tile(f2_a), tile(y2_a), tile(z2_a))
+            with obs.timed("jaxlp.anchor", stage="risk") as t:
+                f2_a, _, _, y2_a, z2_a, _, _ = jax.block_until_ready(
+                    self._solve_risk(d3[a], ic[a], self.valid,
+                                     u_budget[a], dl[a]))
+            anchor_s += t.seconds
+            with obs.span("jaxlp.stage2", b=b):
+                f3r, r, _, _, _, it2, gap2 = self._solve_risk_batch_warm(
+                    d3, ic, valid_b, u_budget, dl,
+                    tile(f2_a), tile(y2_a), tile(z2_a))
             use = (dl > 0)[:, None, None, None]
             f3 = jnp.where(use, f3r, f3)
             r_star = jnp.where(dl > 0, jnp.asarray(r), np.inf)
+            stats["stage2"] = self._stage_stats(it2, gap2,
+                                                active=np.asarray(dl > 0))
         if not skip_stage3:
             if r_star is None:
                 r_in = jnp.full((b,), 1e9, jnp.float32)
@@ -618,16 +650,35 @@ class JaxRoutingSolver:
                 dl_in = jnp.where(jnp.isfinite(r_star),
                                   jnp.asarray(np.asarray(deltas, np.float32)), 0.0)
             f3 = jnp.asarray(f3)
-            _, y3_a = self._solve_stretch(
-                d3[a], ic[a], self.valid, u_budget[a], r_in[a], dl_in[a], f3[a])
-            f3, _ = self._solve_stretch_batch_warm(
-                d3, ic, valid_b, u_budget, r_in, dl_in, f3, tile(y3_a))
+            with obs.timed("jaxlp.anchor", stage="stretch") as t:
+                _, y3_a, _, _ = jax.block_until_ready(self._solve_stretch(
+                    d3[a], ic[a], self.valid, u_budget[a], r_in[a],
+                    dl_in[a], f3[a]))
+            anchor_s += t.seconds
+            with obs.span("jaxlp.stage3", b=b):
+                f3, _, it3, gap3 = self._solve_stretch_batch_warm(
+                    d3, ic, valid_b, u_budget, r_in, dl_in, f3, tile(y3_a))
+            stats["stage3"] = self._stage_stats(it3, gap3)
         f = self._flat_f(np.asarray(f3))
         out_r = None
         if r_star is not None:
             rr = np.asarray(r_star, np.float64)
             out_r = np.where(np.isfinite(rr), rr, np.nan)
-        return {"f": f, "u_star": np.asarray(u, np.float64), "r_star": out_r}
+        stats["anchor_seconds"] = anchor_s
+        return {"f": f, "u_star": np.asarray(u, np.float64), "r_star": out_r,
+                "stats": stats}
+
+    def _stage_stats(self, it, gap, active=None) -> dict:
+        """Host-side per-element telemetry for one batched stage.  Restarts
+        are implied by the deterministic Halpern schedule (one every
+        ``restart_every`` iterations), so no extra while-loop state."""
+        iters = np.asarray(it, np.int64).reshape(-1)
+        out = {"iters": iters,
+               "gap": np.asarray(gap, np.float64).reshape(-1),
+               "restarts": iters // max(self.restart_every, 1)}
+        if active is not None:
+            out["active"] = np.asarray(active, bool).reshape(-1)
+        return out
 
     # ---- fleet batch: many fabrics (padded to this solver's V) at once ------
 
@@ -733,34 +784,48 @@ class JaxRoutingSolver:
             (:func:`repro.parallel.sharding.fleet_mesh`) — shards every
             batched solve over its device axis via ``shard_map``.
 
-        Returns dict with ``f`` (N, P), ``u_star`` (N,), ``r_star`` (N,)|None.
+        Returns dict with ``f`` (N, P), ``u_star`` (N,), ``r_star`` (N,)|None,
+        and ``stats`` per-element solver telemetry (see
+        :meth:`solve_routing_batch`; slice per job with
+        :func:`repro.obs.slice_raw_stats`).
         """
         d3 = jnp.stack([self._dense_tms(t) for t in tms])
         ic = jnp.stack([self._dense_inv_cap(c) for c in capacities])
         valids = jnp.asarray(valids)
         a_el = np.asarray(anchor_elems)
         ga = np.asarray(anchor_of)
+        anchor_s = 0.0
 
-        f_a, _, _, y_a = self._anchor_run(self._solve_mlu_batch,
-                                          d3[a_el], ic[a_el], valids[a_el])
-        f3, u, _, _ = self._fleet_run(
-            mesh, "mlu", d3, ic, valids,
-            jnp.asarray(f_a)[ga], jnp.asarray(y_a)[ga])
+        with obs.timed("jaxlp.fleet_anchor", stage="mlu") as t:
+            f_a, _, _, y_a, _ = jax.block_until_ready(self._anchor_run(
+                self._solve_mlu_batch, d3[a_el], ic[a_el], valids[a_el]))
+        anchor_s += t.seconds
+        with obs.span("jaxlp.fleet_stage1", n=int(d3.shape[0])):
+            f3, u, it1, _, gap1 = self._fleet_run(
+                mesh, "mlu", d3, ic, valids,
+                jnp.asarray(f_a)[ga], jnp.asarray(y_a)[ga])
         u = jnp.asarray(u)
         u_budget = u * 1.005 + 1e-9
+        stats = {"stage1": self._stage_stats(it1, gap1)}
         r_star = None
         if hedging:
             dl = jnp.asarray(np.asarray(deltas, np.float32))
-            f2_a, _, _, y2_a, z2_a = self._anchor_run(
-                self._solve_risk_batch,
-                d3[a_el], ic[a_el], valids[a_el], u_budget[a_el], dl[a_el])
-            f3r, r, _, _, _ = self._fleet_run(
-                mesh, "risk", d3, ic, valids, u_budget, dl,
-                jnp.asarray(f2_a)[ga], jnp.asarray(y2_a)[ga],
-                jnp.asarray(z2_a)[ga])
+            with obs.timed("jaxlp.fleet_anchor", stage="risk") as t:
+                f2_a, _, _, y2_a, z2_a, _, _ = jax.block_until_ready(
+                    self._anchor_run(
+                        self._solve_risk_batch, d3[a_el], ic[a_el],
+                        valids[a_el], u_budget[a_el], dl[a_el]))
+            anchor_s += t.seconds
+            with obs.span("jaxlp.fleet_stage2", n=int(d3.shape[0])):
+                f3r, r, _, _, _, it2, gap2 = self._fleet_run(
+                    mesh, "risk", d3, ic, valids, u_budget, dl,
+                    jnp.asarray(f2_a)[ga], jnp.asarray(y2_a)[ga],
+                    jnp.asarray(z2_a)[ga])
             use = (dl > 0)[:, None, None, None]
             f3 = jnp.where(use, f3r, f3)
             r_star = jnp.where(dl > 0, jnp.asarray(r), np.inf)
+            stats["stage2"] = self._stage_stats(it2, gap2,
+                                                active=np.asarray(dl > 0))
         if not skip_stage3:
             n = d3.shape[0]
             if r_star is None:
@@ -772,16 +837,22 @@ class JaxRoutingSolver:
                 dl_in = jnp.where(jnp.isfinite(r_star),
                                   jnp.asarray(np.asarray(deltas, np.float32)), 0.0)
             f3 = jnp.asarray(f3)
-            _, y3_a = self._anchor_run(
-                self._solve_stretch_batch,
-                d3[a_el], ic[a_el], valids[a_el], u_budget[a_el],
-                r_in[a_el], dl_in[a_el], f3[a_el])
-            f3, _ = self._fleet_run(
-                mesh, "stretch", d3, ic, valids, u_budget, r_in, dl_in,
-                f3, jnp.asarray(y3_a)[ga])
+            with obs.timed("jaxlp.fleet_anchor", stage="stretch") as t:
+                _, y3_a, _, _ = jax.block_until_ready(self._anchor_run(
+                    self._solve_stretch_batch,
+                    d3[a_el], ic[a_el], valids[a_el], u_budget[a_el],
+                    r_in[a_el], dl_in[a_el], f3[a_el]))
+            anchor_s += t.seconds
+            with obs.span("jaxlp.fleet_stage3", n=int(d3.shape[0])):
+                f3, _, it3, gap3 = self._fleet_run(
+                    mesh, "stretch", d3, ic, valids, u_budget, r_in, dl_in,
+                    f3, jnp.asarray(y3_a)[ga])
+            stats["stage3"] = self._stage_stats(it3, gap3)
         f = self._flat_f(np.asarray(f3))
         out_r = None
         if r_star is not None:
             rr = np.asarray(r_star, np.float64)
             out_r = np.where(np.isfinite(rr), rr, np.nan)
-        return {"f": f, "u_star": np.asarray(u, np.float64), "r_star": out_r}
+        stats["anchor_seconds"] = anchor_s
+        return {"f": f, "u_star": np.asarray(u, np.float64), "r_star": out_r,
+                "stats": stats}

@@ -74,6 +74,8 @@ def predict(
     objective: str = "mlu",
 ) -> Prediction:
     """Simulate each strategy over the training window and pick the winner."""
+    from repro import obs
+
     per: dict = {}
     by_name: dict = {}
     for strat in strategies:
@@ -81,5 +83,7 @@ def predict(
         per[strat.name] = res.summary
         by_name[strat.name] = strat
     choice = pick_best(per, cushion, objective=objective)
+    obs.event("predictor.strategy_choice", fabric=fabric.name,
+              strategy=choice, hedging=by_name[choice].hedging)
     return Prediction(fabric=fabric.name, strategy=by_name[choice],
                       per_strategy=per, cushion=cushion)

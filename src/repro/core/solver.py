@@ -81,7 +81,10 @@ class GeminiSolution:
     r_star: float | None
     delta: float
     solve_seconds: float
-    stage_times: dict
+    stage_times: dict = dataclasses.field(default_factory=dict)
+    # raw per-epoch PDHG telemetry (iters/gap/restarts per stage; see
+    # repro.obs.SolverStats.from_pdhg) — None on the scipy backend
+    pdhg_stats: dict | None = None
 
     @property
     def capacities(self) -> np.ndarray:

@@ -1,0 +1,26 @@
+"""repro.obs — structured tracing, solver telemetry, phase accounting.
+
+Usage::
+
+    from repro import obs
+    obs.enable()
+    ... run a controller / bench ...
+    obs.export_jsonl("trace.jsonl")        # -> python -m repro.obs.report
+    obs.export_chrome_trace("trace.json")  # -> chrome://tracing / Perfetto
+
+Disabled (the default), :func:`span`/:func:`event`/:func:`counter` are
+single-flag-check no-ops and nothing allocates; enabling tracing never
+changes numeric results (telemetry rides on ordinary solver outputs).
+"""
+
+from .stats import SolverStats, StageStats, slice_raw_stats
+from .trace import (PhaseTimes, capacity, chrome_trace_events, clear, counter,
+                    disable, enable, enabled, event, events,
+                    export_chrome_trace, export_jsonl, read_jsonl, span, timed)
+
+__all__ = [
+    "enable", "disable", "enabled", "clear", "capacity", "span", "timed",
+    "event", "counter", "events", "PhaseTimes", "export_jsonl",
+    "export_chrome_trace", "read_jsonl", "chrome_trace_events",
+    "SolverStats", "StageStats", "slice_raw_stats",
+]

@@ -109,6 +109,7 @@ def score_stage_batch(fabric: Fabric, tms: np.ndarray, capacities: np.ndarray,
 
     Returns ``(f, u)`` with shapes ``(B, P)`` and ``(B,)``.
     """
+    from repro import obs
     from repro.core.engine import (_pad_tms, _solve_routing_scipy,
                                    routing_solver_for)
 
@@ -116,31 +117,35 @@ def score_stage_batch(fabric: Fabric, tms: np.ndarray, capacities: np.ndarray,
     caps = np.asarray(capacities, dtype=np.float64)
     b = caps.shape[0]
     paths = build_paths(fabric.n_pods)
-    stranded = np.asarray([proxy_splits(paths, caps[i]) is None
-                           for i in range(b)])
-    if cc.solver_backend == "pdhg":
-        solver = routing_solver_for(fabric, cc.k_critical,
-                                    cc.pdhg_max_iters, cc.pdhg_tol)
-        tms_b = np.broadcast_to(_pad_tms(tms, cc.k_critical),
-                                (b, cc.k_critical, tms.shape[1]))
-        out = solver.solve_routing_batch(
-            np.ascontiguousarray(tms_b), caps, hedging=hedging,
-            deltas=np.full((b,), delta), skip_stage3=sc.skip_stage3)
-        f_b = np.asarray(out["f"], np.float64)
-        u_b = np.where(stranded, np.inf, np.asarray(out["u_star"], np.float64))
+    with obs.span("transition.score_stage_batch", b=b,
+                  backend=cc.solver_backend):
+        stranded = np.asarray([proxy_splits(paths, caps[i]) is None
+                               for i in range(b)])
+        if cc.solver_backend == "pdhg":
+            solver = routing_solver_for(fabric, cc.k_critical,
+                                        cc.pdhg_max_iters, cc.pdhg_tol)
+            tms_b = np.broadcast_to(_pad_tms(tms, cc.k_critical),
+                                    (b, cc.k_critical, tms.shape[1]))
+            out = solver.solve_routing_batch(
+                np.ascontiguousarray(tms_b), caps, hedging=hedging,
+                deltas=np.full((b,), delta), skip_stage3=sc.skip_stage3)
+            f_b = np.asarray(out["f"], np.float64)
+            u_b = np.where(stranded, np.inf,
+                           np.asarray(out["u_star"], np.float64))
+            return f_b, u_b
+        f_b = np.empty((b, paths.n_paths))
+        u_b = np.empty((b,))
+        for i in range(b):
+            try:
+                f, u, _ = _solve_routing_scipy(fabric, tms, sc, caps[i],
+                                               delta)
+            except RuntimeError:
+                f = proxy_splits(paths, caps[i])
+                if f is None:  # fully stranded: uniform spread, MLU inf anyway
+                    f = np.full((paths.n_paths,), 1.0 / (fabric.n_pods - 1))
+                u = float("inf")
+            f_b[i], u_b[i] = f, (float("inf") if stranded[i] else u)
         return f_b, u_b
-    f_b = np.empty((b, paths.n_paths))
-    u_b = np.empty((b,))
-    for i in range(b):
-        try:
-            f, u, _ = _solve_routing_scipy(fabric, tms, sc, caps[i], delta)
-        except RuntimeError:
-            f = proxy_splits(paths, caps[i])
-            if f is None:  # fully stranded: spread uniformly, MLU is inf anyway
-                f = np.full((paths.n_paths,), 1.0 / (fabric.n_pods - 1))
-            u = float("inf")
-        f_b[i], u_b[i] = f, (float("inf") if stranded[i] else u)
-    return f_b, u_b
 
 
 def evaluate_transition(fabric: Fabric, tms: np.ndarray, n_old: np.ndarray,

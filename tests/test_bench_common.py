@@ -61,7 +61,9 @@ def test_calibrate_returns_positive_seconds():
 BASE_FLEET = {
     "aggregate": {"fleet_warm_s": 10.0, "figures_s": 20.0,
                   "max_parity_rel_delta": 1e-6,
-                  "mlu_improvement_vs_vlb": 0.5, "frac_gemini_feasible": 1.0},
+                  "mlu_improvement_vs_vlb": 0.5, "frac_gemini_feasible": 1.0,
+                  "phase_s": {"plan": 1.0, "anchor": 0.5, "solve": 8.0,
+                              "score": 3.0, "transition": 0.0}},
     "_wall_s": 30.0,
     "_calibration_s": 1.0,
 }
@@ -87,6 +89,32 @@ def test_check_calibration_normalizes_slow_runners():
     fresh["_wall_s"] = 60.0
     fresh["_calibration_s"] = 2.0  # ...on a 2x slower machine
     assert check("BENCH_fleet.json", fresh, BASE_FLEET) == []
+
+
+def test_check_fails_single_phase_regression_hidden_in_flat_total():
+    # one stage blows up while another speeds up: the end-to-end totals are
+    # unchanged, so only the per-phase gate can catch it
+    fresh = json.loads(json.dumps(BASE_FLEET))
+    fresh["aggregate"]["phase_s"]["score"] = 9.0  # 3x slower scoring
+    fresh["aggregate"]["phase_s"]["solve"] = 2.0  # masked by a faster solve
+    fails = check("BENCH_fleet.json", fresh, BASE_FLEET)
+    assert fails and any("phase_s.score" in f for f in fails)
+
+
+def test_check_fails_on_missing_phase_metric():
+    fresh = json.loads(json.dumps(BASE_FLEET))
+    del fresh["aggregate"]["phase_s"]
+    fails = check("BENCH_fleet.json", fresh, BASE_FLEET)
+    assert any("missing phase_time metric" in f for f in fails)
+
+
+def test_phase_floor_ignores_subsecond_jitter():
+    fresh = json.loads(json.dumps(BASE_FLEET))
+    # 0.5s floor: a 0.1s -> 0.4s phase wiggle is timer noise, not regression
+    base = json.loads(json.dumps(BASE_FLEET))
+    base["aggregate"]["phase_s"]["score"] = 0.1
+    fresh["aggregate"]["phase_s"]["score"] = 0.4
+    assert check("BENCH_fleet.json", fresh, base) == []
 
 
 def test_specs_cover_all_gated_artifacts():
