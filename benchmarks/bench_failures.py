@@ -1,0 +1,194 @@
+"""Failure-contingency bench: survivability curves, hedged vs unhedged.
+
+For each fabric, every §4.6 strategy's executed plan is re-scored under K
+sampled failure contingencies (:mod:`repro.failures`) at increasing
+link-failure severity — the same scenario draws for every strategy
+(deterministic per-fabric seeds), so the comparison is paired.  The curve of
+worst-contingency p99.9 loss vs failure severity is the survivability story:
+hedged plans degrade gracefully under failure bursts because stage-2 hedging
+bounds the split mass any single link carries, while unhedged plans
+concentrate mass and fall off a cliff when those links die.  Volatile skewed
+fabrics (F3/F11/F21-class) are the headline; the unskewed volatile F6 rides
+along as the control.
+
+The contingency axis runs as one extra leading batch axis through the fused
+fleet-batched scoring kernels — one device program per severity level, not
+K sequential re-scores.
+
+    PYTHONPATH=src python -m benchmarks.bench_failures          # smoke scale
+    PYTHONPATH=src python -m benchmarks.bench_failures --tiny   # CI smoke
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import FLEET_PARAMS, SCALE, cached
+from repro.core import (ControllerConfig, FailureConfig, LossConfig,
+                        SolverConfig, STRATEGIES)
+from repro.core.engine import execute_plan, plan_artifacts
+from repro.core.fleet import FLEET_SPECS, make_fabric, make_trace, sub_burst_params
+
+# CI smoke: one volatile skewed fabric + the unskewed control, coarse grid
+TINY_PARAMS = dict(fabric_indices=(2, 5), days=6.0, interval_minutes=120.0,
+                   routing_interval_hours=12.0, topology_interval_days=2.0,
+                   aggregation_days=2.0, k_critical=4, n_scenarios=12)
+
+# link-failure severities swept per fabric (Binomial failure prob per
+# physical trunk link); 0.0 anchors the no-failure baseline of each curve
+P_LINK_LEVELS = (0.0, 0.08, 0.2)
+
+HIGH_VOLATILITY_SHAPE = 2.0
+SKEWED_SIGMA = 0.5
+
+HEDGED = ("(uniform,hedge)", "(nonuniform,hedge)")
+UNHEDGED = ("(uniform,nohedge)", "(nonuniform,nohedge)")
+
+
+def _params(scale: str) -> dict:
+    if scale == "tiny":
+        return dict(TINY_PARAMS)
+    p = dict(FLEET_PARAMS[scale])
+    # volatile skewed class (F3/F11/F21) + the F6 control at every scale
+    idx = set(range(min(p.pop("n_fabrics"), 6))) | {2, 5, 10, 20}
+    p["fabric_indices"] = tuple(sorted(idx))
+    p["n_scenarios"] = 64
+    return p
+
+
+def _run(scale: str) -> dict:
+    p = _params(scale)
+    cc_base = ControllerConfig(
+        routing_interval_hours=p["routing_interval_hours"],
+        topology_interval_days=p["topology_interval_days"],
+        aggregation_days=p["aggregation_days"],
+        k_critical=p["k_critical"])
+    sc = SolverConfig(stage1_method="scaled")
+    rows = []
+    for idx in p["fabric_indices"]:
+        spec = FLEET_SPECS[idx]
+        fabric = make_fabric(spec)
+        trace = make_trace(spec, fabric, days=p["days"],
+                           interval_minutes=p["interval_minutes"])
+        cc = dataclasses.replace(
+            cc_base, loss=LossConfig(burst=sub_burst_params(spec)))
+        t0 = time.time()
+        per = {}
+        for strat in STRATEGIES:
+            # one plan walk per strategy; each severity re-scores the same
+            # executed plan under its own contingency set
+            art = plan_artifacts(fabric, trace, strat, cc, sc)
+            curve = []
+            for p_link in P_LINK_LEVELS:
+                fc = FailureConfig(n_scenarios=p["n_scenarios"],
+                                   p_link=p_link, seed=0)
+                res = execute_plan(fabric, trace, strat,
+                                   dataclasses.replace(cc, failures=fc),
+                                   sc, art)
+                rep = res.contingency
+                curve.append({
+                    "p_link": p_link,
+                    "mean_failed_links": float(
+                        np.mean(rep.n_failed_links)),
+                    "cont_worst_p999_loss": res.summary[
+                        "cont_worst_p999_loss"],
+                    "cont_mean_p999_loss": res.summary[
+                        "cont_mean_p999_loss"],
+                    "cont_worst_p999_mlu": res.summary[
+                        "cont_worst_p999_mlu"],
+                    "p999_loss": res.summary["p999_loss"],
+                })
+            per[strat.name] = curve
+        rows.append({
+            "fabric": spec.name,
+            "pods": fabric.n_pods,
+            "high_volatility": spec.burst_shape < HIGH_VOLATILITY_SHAPE,
+            "skewed": spec.skew_sigma > SKEWED_SIGMA,
+            "n_scenarios": p["n_scenarios"],
+            "p_link_levels": list(P_LINK_LEVELS),
+            "per_strategy": per,
+            "elapsed_s": round(time.time() - t0, 1),
+        })
+
+    def class_worst(row, names, level: int) -> float:
+        """Best (lowest) worst-contingency p99.9 loss within a strategy
+        class at severity index ``level`` — the operator would deploy the
+        class's best plan."""
+        return min(row["per_strategy"][n][level]["cont_worst_p999_loss"]
+                   for n in names)
+
+    top = len(P_LINK_LEVELS) - 1
+    vol = [r for r in rows if r["high_volatility"] and r["skewed"]]
+    gaps = []
+    n_better = 0
+    for r in vol:
+        h, nh = class_worst(r, HEDGED, top), class_worst(r, UNHEDGED, top)
+        if h < nh:
+            n_better += 1
+        gaps.append((nh - h) / max(nh, 1e-9))
+    agg = {
+        "n_fabrics": len(rows),
+        "n_volatile_skewed": len(vol),
+        "n_scenarios": p["n_scenarios"],
+        "top_p_link": P_LINK_LEVELS[top],
+        # the acceptance anchor: hedged plans carry strictly lower
+        # worst-contingency p99.9 loss than unhedged at the top severity on
+        # at least one volatile fabric
+        "n_volatile_hedged_strictly_better": n_better,
+        "hedged_strictly_better": bool(n_better >= 1),
+        "survivability_gap_top": (float(np.mean(gaps)) if gaps
+                                  else float("nan")),
+        "max_hedged_worst_p999_loss_top": (float(max(
+            class_worst(r, HEDGED, top) for r in vol)) if vol
+            else float("nan")),
+    }
+    return {"rows": rows, "aggregate": agg}
+
+
+def run(force: bool = False, scale: str | None = None) -> dict:
+    scale = scale or SCALE
+    if scale == "tiny":  # CI smoke: always fresh, never cached
+        return _run("tiny")
+    return cached("failures", lambda: _run(scale), force,
+                  params=_params(scale))
+
+
+def main() -> None:
+    import argparse
+    import json
+    import pathlib
+
+    from benchmarks.common import finalize
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: volatile fabric + control, coarse grid")
+    ap.add_argument("--force", action="store_true",
+                    help="ignore cached results")
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write the result to this JSON file")
+    args = ap.parse_args()
+    t0 = time.time()
+    out = run(force=args.force, scale="tiny" if args.tiny else None)
+    finalize(out, t0)
+    print(json.dumps(out["aggregate"], indent=2))
+    for r in out["rows"]:
+        top = len(r["p_link_levels"]) - 1
+        curves = {n: [lvl["cont_worst_p999_loss"] for lvl in c]
+                  for n, c in r["per_strategy"].items()}
+        print(f"{r['fabric']} (V={r['pods']}, K={r['n_scenarios']}, "
+              f"vol={r['high_volatility']}, skew={r['skewed']}): " + " ".join(
+                  f"{n}={'/'.join(f'{v:.4f}' for v in c)}"
+                  for n, c in curves.items()))
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps(out, indent=2))
+    assert out["aggregate"]["hedged_strictly_better"], (
+        "hedged plans must carry strictly lower worst-contingency p99.9 "
+        "loss than unhedged on at least one volatile fabric")
+
+
+if __name__ == "__main__":
+    main()

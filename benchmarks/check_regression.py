@@ -74,6 +74,15 @@ SPECS = {
         "higher": [("aggregate.mlu_improvement_vs_vlb", 0.02),
                    ("aggregate.frac_gemini_feasible", 0.0)],
     },
+    "BENCH_failures.json": {
+        "time": ["_wall_s"],
+        # survivability is quality: the hedged class's worst-contingency
+        # p99.9 loss must not grow, and the hedged-vs-unhedged gap at the top
+        # severity must not collapse
+        "lower": [("aggregate.max_hedged_worst_p999_loss_top", 0.02)],
+        "higher": [("aggregate.n_volatile_hedged_strictly_better", 0),
+                   ("aggregate.survivability_gap_top", 0.02)],
+    },
 }
 
 TIME_ABS_FLOOR_S = 1.0  # ignore sub-second jitter on tiny steps

@@ -66,6 +66,16 @@ def main() -> None:
          f"/{tr['n_transitions']};skipped={tr['n_skipped']};"
          f"staged_p999_mlu_delta={tr['staged_vs_instant_p999_mlu_delta']}")
 
+    # ---- failure contingencies: survivability under link/panel faults --------
+    from benchmarks import bench_failures
+
+    fa = bench_failures.run()["aggregate"]
+    emit("failures_survivability", 0.0,
+         f"hedged_strictly_better={fa['hedged_strictly_better']};"
+         f"gap_top={fa['survivability_gap_top']:.2f};"
+         f"volatile_better={fa['n_volatile_hedged_strictly_better']}"
+         f"/{fa['n_volatile_skewed']}")
+
     # ---- prediction quality: Figs 22/23/24 -----------------------------------
     from benchmarks import bench_prediction
 

@@ -16,6 +16,7 @@ from repro.core.engine import (ControllerPlan, PlanArtifacts, plan_artifacts,
 from repro.core.fleet_engine import FleetJob, predict_fleet, run_fleet
 from repro.core.predictor import Prediction, pick_best, predict
 from repro.burst import BurstParams, LossConfig
+from repro.failures import ContingencyReport, FailureConfig
 from repro.transition import TransitionConfig, should_reconfigure
 
 __all__ = [
@@ -26,5 +27,6 @@ __all__ = [
     "run_controller", "ControllerPlan", "PlanArtifacts", "plan_artifacts",
     "plan_controller", "run_controller_batched", "FleetJob", "run_fleet",
     "predict_fleet", "Prediction", "pick_best", "predict",
-    "BurstParams", "LossConfig", "TransitionConfig", "should_reconfigure",
+    "BurstParams", "LossConfig", "ContingencyReport", "FailureConfig",
+    "TransitionConfig", "should_reconfigure",
 ]

@@ -40,6 +40,7 @@ from repro.core.rounding import realize
 from repro.core.simulator import IntervalMetrics, route_metrics, summarize
 from repro.core.solver import GeminiSolution, SolverConfig, Strategy, solve
 from repro.core.traffic import Trace
+from repro.failures.config import FailureConfig
 from repro.transition.config import TransitionConfig
 
 __all__ = ["ControllerConfig", "ControllerResult", "run_controller"]
@@ -72,6 +73,13 @@ class ControllerConfig:
     # keeps topology updates instantaneous and free, bit-identical to the
     # pre-transition controller.
     transition: TransitionConfig | None = None
+    # contingency analysis (repro.failures): None (default) skips it entirely
+    # — controller output is bit-identical to the pre-failures behavior.
+    # Set, every sweep is additionally evaluated under K sampled failure
+    # scenarios (one extra leading vmap axis through the scoring stack), the
+    # summary gains cont_* keys, and — with contingency_weight set — the
+    # transition gate blends in worst-contingency benefit/disruption.
+    failures: FailureConfig | None = None
 
 
 @dataclasses.dataclass
@@ -96,6 +104,9 @@ class ControllerResult:
     # repro.obs.SolverStats (per-epoch PDHG iterations / certified gaps /
     # restarts); None on the scipy backend
     solver_stats: object = None
+    # repro.failures.ContingencyReport (per-scenario worst/mean MLU and loss
+    # under the sampled failure set); None unless ControllerConfig.failures
+    contingency: object = None
 
 
 def _window(trace: Trace, end: int, n: int) -> np.ndarray:
@@ -135,6 +146,10 @@ def run_controller(
     tc = cc.transition
     phases = obs.PhaseTimes()
     pdhg_raws: list = []
+    n_fallbacks = 0
+    # scoring inputs retained for the post-walk fused contingency evaluation
+    # (same block order plan_score_blocks produces — parity is test-enforced)
+    c_blocks, c_w, c_caps, c_seeds, c_tms, c_deltas = [], [], [], [], [], []
 
     sol: GeminiSolution | None = None
     n_realized: np.ndarray | None = None
@@ -194,6 +209,7 @@ def run_controller(
         if sol.pdhg_stats is not None:
             pdhg_raws.append(sol.pdhg_stats)
             phases.add("anchor", sol.pdhg_stats.get("anchor_seconds", 0.0))
+            n_fallbacks += int(sol.pdhg_stats.get("n_fallbacks", 0))
         n_routing += 1
         transit_mass += sol.transit_fraction(paths)
         transit_n += 1
@@ -204,9 +220,17 @@ def run_controller(
             rem_lo, rem_seed = 0, (cc.loss.seed + start if cc.loss is not None
                                    else None)
             if staged is not None:
-                stage_m, rem_lo, rem_seed = _score_stages(block, staged, cc,
-                                                          trace, start)
+                stage_m, spans, seeds, rem_lo, rem_seed = _score_stages(
+                    block, staged, cc, trace, start)
                 metrics = metrics.concat(stage_m)
+                if cc.failures is not None:
+                    for s, (k, lo, hi) in enumerate(spans):
+                        c_blocks.append(block[lo:hi])
+                        c_w.append(staged.stage_w[k])
+                        c_caps.append(staged.stage_caps[k])
+                        c_seeds.append(seeds[s] if seeds is not None else 0)
+                        c_tms.append(tms)
+                        c_deltas.append(sol.delta)
             # vary the burst seed per block (identical bursts in every block
             # would collapse the p99.9 onto one replayed realization) while
             # keeping it a pure function of (cc.loss.seed, start) — strategies
@@ -221,15 +245,41 @@ def run_controller(
                                   backend=cc.backend, loss_cfg=loss_cfg,
                                   interval_seconds=trace.interval_minutes
                                   * 60.0))
+                if cc.failures is not None:
+                    c_blocks.append(block[rem_lo:])
+                    c_w.append(w)
+                    c_caps.append(cap)
+                    c_seeds.append(rem_seed if rem_seed is not None else 0)
+                    c_tms.append(tms)
+                    c_deltas.append(sol.delta)
+
+    summary = summarize(metrics)
+    contingency = None
+    if cc.failures is not None and c_blocks:
+        from repro.core.engine import _pad_tms
+        from repro.failures import evaluate_plan
+
+        with phases("failures"):
+            contingency = evaluate_plan(
+                fabric, cc, sc, c_blocks, np.stack(c_w), np.stack(c_caps),
+                c_seeds if cc.loss is not None else None,
+                trace.interval_minutes * 60.0,
+                tms_blocks=(np.stack([_pad_tms(t, cc.k_critical)
+                                      for t in c_tms])
+                            if cc.failures.resolve else None),
+                deltas=(np.asarray(c_deltas)
+                        if cc.failures.resolve else None))
+            summary.update(contingency.summary_update())
 
     solver_stats = None
     if pdhg_raws:
         solver_stats = obs.SolverStats.from_pdhg(
-            pdhg_raws, cc.pdhg_max_iters, cc.pdhg_tol)
+            pdhg_raws, cc.pdhg_max_iters, cc.pdhg_tol,
+            n_fallbacks=n_fallbacks)
     return ControllerResult(
         strategy=strategy,
         metrics=metrics,
-        summary=summarize(metrics),
+        summary=summary,
         n_routing_updates=n_routing,
         n_topology_updates=n_topology,
         final_topology=np.asarray(n_realized),
@@ -239,6 +289,7 @@ def run_controller(
         transition_log=tuple(transition_log),
         stage_times=phases.times,
         solver_stats=solver_stats,
+        contingency=contingency,
     )
 
 
@@ -262,8 +313,23 @@ def _transition_gate(fabric, tms, n_old, n_new, tc, cc, sc, *,
                                  horizon_intervals=horizon_intervals)
     if ev is None:
         return True, None, None, t.seconds
-    apply = (not tc.decide) or should_reconfigure(ev.benefit, ev.disruption,
-                                                  tc.hysteresis)
+    if tc.decide:
+        fcfg = cc.failures
+        if fcfg is not None and fcfg.contingency_weight is not None:
+            # failure-aware gate: blend in the worst-contingency benefit /
+            # disruption pair (fixed-routing re-scores under sampled masks)
+            from repro.failures import transition_worst_case
+
+            b_w, d_w = transition_worst_case(fabric, tms, ev, fcfg)
+            apply = should_reconfigure(
+                ev.benefit, ev.disruption, tc.hysteresis,
+                contingency_weight=fcfg.contingency_weight,
+                benefit_worst=b_w, disruption_worst=d_w)
+        else:
+            apply = should_reconfigure(ev.benefit, ev.disruption,
+                                       tc.hysteresis)
+    else:
+        apply = True
     staged = ev if apply and not tc.instantaneous else None
     if staged is not None:
         obs.event("transition.staged", n_stages=ev.n_stages,
@@ -278,8 +344,10 @@ def _score_stages(block, ev, cc, trace, start):
     :func:`repro.core.simulator.route_metrics_batched` (the epoch-batched
     linkload/queueloss kernels); span and burst-seed arithmetic comes from
     the engine-shared :func:`repro.transition.stage_partition`.  Returns
-    ``(metrics, rem_lo, rem_seed)`` — the concatenated staged metrics, the
-    offset at which the steady new topology takes over, and its burst seed.
+    ``(metrics, spans, seeds, rem_lo, rem_seed)`` — the concatenated staged
+    metrics, the scored stage spans and their burst seeds (the contingency
+    collector replays them), the offset at which the steady new topology
+    takes over, and its burst seed.
     """
     from repro.core.simulator import route_metrics_batched
     from repro.transition import stage_partition
@@ -293,7 +361,7 @@ def _score_stages(block, ev, cc, trace, start):
         ev.stage_w[idx], ev.stage_caps[idx], cc.overload_threshold,
         backend=cc.backend, loss_cfg=cc.loss, loss_seeds=seeds,
         interval_seconds=trace.interval_minutes * 60.0)
-    return stage_m, rem_lo, rem_seed
+    return stage_m, spans, seeds, rem_lo, rem_seed
 
 
 def _solve_routing_only(fabric, tms, strategy, sc, window, capacities,
@@ -315,7 +383,8 @@ def _solve_routing_only(fabric, tms, strategy, sc, window, capacities,
             delta = (sc.delta if sc.delta is not None
                      else estimate_delta(window, sc.delta_quantile))
         if cc.solver_backend == "pdhg":
-            from repro.core.engine import _pad_tms, routing_solver_for
+            from repro.core.engine import (_pad_tms, pdhg_finite_fallback,
+                                           routing_solver_for)
 
             solver = routing_solver_for(fabric, cc.k_critical,
                                         cc.pdhg_max_iters, cc.pdhg_tol)
@@ -324,11 +393,16 @@ def _solve_routing_only(fabric, tms, strategy, sc, window, capacities,
                 np.asarray(capacities, float)[None],
                 hedging=strategy.hedging, deltas=np.asarray([delta]),
                 skip_stage3=sc.skip_stage3)
-            f, u_star = out["f"][0], float(out["u_star"][0])
+            f_g, u_g, n_fb = pdhg_finite_fallback(
+                fabric, [tms], np.asarray(capacities, float)[None],
+                np.asarray([delta]), sc, out["f"], out["u_star"])
+            f, u_star = f_g[0], float(u_g[0])
             r_star = (None if out["r_star"] is None
                       or not np.isfinite(out["r_star"][0])
                       else float(out["r_star"][0]))
-            pdhg_stats = out["stats"]
+            pdhg_stats = dict(out["stats"])
+            if n_fb:
+                pdhg_stats["n_fallbacks"] = n_fb
         else:
             from repro.core.engine import _solve_routing_scipy
 

@@ -161,6 +161,43 @@ def _solve_routing_scipy(fabric, tms, sc, capacities, delta):
     return f, u_star, r_star
 
 
+def pdhg_finite_fallback(fabric, tms_seq, caps_b, deltas_b, sc,
+                         f_b: np.ndarray, u_b: np.ndarray):
+    """Replace non-finite PDHG batch elements with scipy re-solves.
+
+    Under near-zero residual capacity (failure masks stacked on transition
+    drains) the first-order iterations can overflow to NaN/Inf; silently
+    scoring such splits would poison a whole sweep's metrics.  Each bad
+    element — any non-finite entry in its splits or its ``u*`` — is re-solved
+    through the scipy/HiGHS path on its own TMs/capacities; an element whose
+    LP is outright infeasible (fully stranded commodity) keeps uniform splits
+    with ``u = inf``, mirroring
+    :func:`repro.transition.score.score_stage_batch`.
+
+    ``tms_seq`` is anything indexable per element (the unpadded per-epoch
+    tuple, or a padded ``(B, m, C)`` array — zero TM rows are vacuous in the
+    LP).  Returns ``(f_b, u_b, n_fallbacks)`` with the bad rows replaced.
+    """
+    f_b = np.array(f_b, np.float64, copy=True)
+    u_b = np.array(u_b, np.float64, copy=True)
+    bad = ~(np.isfinite(f_b).all(axis=tuple(range(1, f_b.ndim)))
+            & np.isfinite(u_b))
+    n_bad = int(bad.sum())
+    if not n_bad:
+        return f_b, u_b, 0
+    for i in np.nonzero(bad)[0]:
+        try:
+            f_i, u_i, _ = _solve_routing_scipy(
+                fabric, np.asarray(tms_seq[i], np.float64), sc,
+                np.asarray(caps_b[i], np.float64), float(deltas_b[i]))
+        except RuntimeError:
+            f_i = np.full(f_b.shape[1], 1.0 / (fabric.n_pods - 1))
+            u_i = np.inf
+        f_b[i], u_b[i] = f_i, u_i
+    obs.event("solver.nonfinite_fallback", fabric=fabric.name, n=n_bad)
+    return f_b, u_b, n_bad
+
+
 @dataclasses.dataclass
 class PlanArtifacts:
     """Stackable output of the controller's plan walk (phase 1).
@@ -268,10 +305,13 @@ def plan_score_blocks(trace: Trace, art: PlanArtifacts, w_b: np.ndarray,
     staged epochs' ``stage_w``/``stage_caps`` are taken from ``art.staging``
     as-is, so callers in a padded layout must pad those too.
 
-    Returns ``(blocks, block_w, block_caps, loss_seeds)``; ``blocks`` are
-    (T_b, C) demand slices of ``trace``.
+    Returns ``(blocks, block_w, block_caps, loss_seeds, block_epoch)``;
+    ``blocks`` are (T_b, C) demand slices of ``trace`` and ``block_epoch``
+    maps each block (stage blocks included) back to its routing-epoch index
+    — the contingency evaluator's re-solve mode uses it to pick each block's
+    critical TMs and burst size.
     """
-    blocks, block_w, block_caps, loss_seeds = [], [], [], []
+    blocks, block_w, block_caps, loss_seeds, block_epoch = [], [], [], [], []
     for i, ep in enumerate(art.plan.epochs):
         block = trace.demand[ep.start: ep.stop]
         rem_lo, rem_seed = 0, (cc.loss.seed + ep.start
@@ -288,12 +328,14 @@ def plan_score_blocks(trace: Trace, art: PlanArtifacts, w_b: np.ndarray,
                 block_w.append(ev.stage_w[k])
                 block_caps.append(ev.stage_caps[k])
                 loss_seeds.append(seeds[s] if seeds is not None else 0)
+                block_epoch.append(i)
         if block.shape[0] - rem_lo > 0:
             blocks.append(block[rem_lo:])
             block_w.append(w_b[i])
             block_caps.append(caps[i])
             loss_seeds.append(rem_seed if rem_seed is not None else 0)
-    return blocks, block_w, block_caps, loss_seeds
+            block_epoch.append(i)
+    return blocks, block_w, block_caps, loss_seeds, block_epoch
 
 
 def transit_fraction_of(paths, f_b: np.ndarray) -> float:
@@ -327,10 +369,13 @@ def execute_plan(fabric: Fabric, trace: Trace, strategy: Strategy,
             out = solver.solve_routing_batch(
                 art.tms_padded(cc.k_critical), caps, hedging=fixed.hedging,
                 deltas=art.deltas, skip_stage3=sc.skip_stage3)
-            f_b = out["f"]
+            f_b, _, n_fb = pdhg_finite_fallback(
+                fabric, art.tms, caps, art.deltas, sc,
+                out["f"], out["u_star"])
             phases.add("anchor", out["stats"].get("anchor_seconds", 0.0))
             solver_stats = obs.SolverStats.from_pdhg(
-                [out["stats"]], cc.pdhg_max_iters, cc.pdhg_tol)
+                [out["stats"]], cc.pdhg_max_iters, cc.pdhg_tol,
+                n_fallbacks=n_fb)
         elif cc.solver_backend == "scipy":
             f_b = np.stack([
                 _solve_routing_scipy(fabric, tms, sc, c, d)[0]
@@ -342,8 +387,8 @@ def execute_plan(fabric: Fabric, trace: Trace, strategy: Strategy,
     # ---- phase 3: single-pass batched scoring -------------------------------
     with phases("score", "engine.score"):
         w_b = routing_weight_matrices(paths, f_b)
-        blocks, block_w, block_caps, loss_seeds = plan_score_blocks(
-            trace, art, w_b, caps, cc)
+        blocks, block_w, block_caps, loss_seeds, block_epoch = \
+            plan_score_blocks(trace, art, w_b, caps, cc)
         metrics = route_metrics_batched(
             blocks, np.stack(block_w), np.stack(block_caps),
             cc.overload_threshold,
@@ -351,10 +396,31 @@ def execute_plan(fabric: Fabric, trace: Trace, strategy: Strategy,
             loss_seeds=loss_seeds if cc.loss is not None else None,
             interval_seconds=trace.interval_minutes * 60.0)
 
+    summary = summarize(metrics)
+
+    # ---- contingency analysis (optional; cc.failures=None skips) ------------
+    contingency = None
+    if cc.failures is not None:
+        from repro.failures import evaluate_plan
+
+        with phases("failures", "engine.failures"):
+            ep_idx = np.asarray(block_epoch)
+            contingency = evaluate_plan(
+                fabric, cc, sc, blocks, np.stack(block_w),
+                np.stack(block_caps),
+                loss_seeds if cc.loss is not None else None,
+                trace.interval_minutes * 60.0,
+                tms_blocks=(art.tms_padded(cc.k_critical)[ep_idx]
+                            if cc.failures.resolve else None),
+                deltas=(art.deltas[ep_idx]
+                        if cc.failures.resolve else None))
+            summary.update(contingency.summary_update())
+
     return ControllerResult(
         strategy=strategy,
         metrics=metrics,
-        summary=summarize(metrics),
+        summary=summary,
+        contingency=contingency,
         n_routing_updates=art.plan.n_routing,
         n_topology_updates=art.n_topology,
         final_topology=np.asarray(art.n_realized),

@@ -42,7 +42,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.engine import (execute_plan, plan_artifacts, plan_score_blocks,
+from repro.core.engine import (execute_plan, pdhg_finite_fallback,
+                               plan_artifacts, plan_score_blocks,
                                routing_solver_for, transit_fraction_of)
 from repro.core.fleet import (commodity_slots, fleet_bucket_key, pad_pods,
                               scatter_pad)
@@ -178,14 +179,28 @@ def _run_bucket(key, idxs, resolved, arts, results, mesh):
             hedging = hedging or bool(j.strategy.hedging)
             spans.append((n, n + b))
             n += b
+        tms_all = np.concatenate(tms_n)
+        caps_all = np.concatenate(caps_n)
+        deltas_all = np.concatenate(deltas_n)
         out = solver.solve_routing_fleet(
-            np.concatenate(tms_n), np.concatenate(caps_n),
+            tms_all, caps_all,
             np.concatenate(valid_n), np.asarray(anchor_elems),
             np.asarray(anchor_of), hedging=hedging,
-            deltas=np.concatenate(deltas_n), skip_stage3=skip_stage3,
+            deltas=deltas_all, skip_stage3=skip_stage3,
             mesh=mesh)
     solve_s = t_solve.seconds
     f_n = out["f"]  # (N, P_padded); zero mass on padded pods by construction
+    # non-finite guard: any element whose PDHG output came back NaN/Inf is
+    # re-solved via scipy directly in the padded layout (padded commodities
+    # carry zero demand, padded edges zero capacity — both exactly vacuous)
+    bad = ~(np.isfinite(np.asarray(f_n, np.float64)).all(axis=1)
+            & np.isfinite(np.asarray(out["u_star"], np.float64)))
+    if bad.any():
+        sc0 = resolved[idxs[0]][2]  # skip_stage3 is part of the bucket key
+        f_n, _, _ = pdhg_finite_fallback(
+            _bucket_fabric(vp), tms_all, caps_all, deltas_all, sc0,
+            f_n, out["u_star"])
+    fb_of = {i: int(bad[lo:hi].sum()) for i, (lo, hi) in zip(idxs, spans)}
     # per-job telemetry: slice the fleet-wide stats along the flattened batch
     # axis; the bucket's anchor time and solve wall-clock are shared costs,
     # apportioned evenly across jobs (matching solver_seconds semantics)
@@ -193,7 +208,7 @@ def _run_bucket(key, idxs, resolved, arts, results, mesh):
     stats_of = {
         i: obs.SolverStats.from_pdhg(
             [obs.slice_raw_stats(out["stats"], lo, hi, anchor_share)],
-            max_iters, tol)
+            max_iters, tol, n_fallbacks=fb_of[i])
         for i, (lo, hi) in zip(idxs, spans)}
 
     # ---- phase 3: one fused scoring pass over the whole bucket --------------
@@ -220,7 +235,7 @@ def _run_bucket(key, idxs, resolved, arts, results, mesh):
                         stage_caps=scatter_pad(ev.stage_caps, slots, cp,
                                                axis=1))
                     for ev in art.staging))
-            blocks, block_w, block_caps, loss_seeds = plan_score_blocks(
+            blocks, block_w, block_caps, loss_seeds, _ = plan_score_blocks(
                 j.trace, art_p, w_b, caps_p, cc)
             blocks_fleet.append([scatter_pad(np.asarray(bl, np.float64), slots,
                                              cp, axis=1) for bl in blocks])
@@ -238,10 +253,76 @@ def _run_bucket(key, idxs, resolved, arts, results, mesh):
             interval_seconds=key[-1] * 60.0,
             loss_blocks_fleet=native_blocks_fleet, loss_slots_fleet=slots_fleet)
 
+    # ---- optional contingency analysis (jobs with cc.failures set) ----------
+    # fixed-routing jobs stay in the padded bucket layout: every (job,
+    # scenario) pair is one more row of a single fused route_metrics_fleet
+    # launch.  Re-solve jobs drop to their fabric's native layout (routing is
+    # re-solved per scenario on its own flattened PDHG batch).
+    cont_of: dict = {}
+    fail_share = 0.0
+    if any(resolved[i][1].failures is not None for i in idxs):
+        from repro.failures import (evaluate_plan, report_from_metrics,
+                                    sample_masks)
+        from repro.failures.evaluate import (EvalJob,
+                                             contingency_metrics_jobs)
+
+        with obs.timed("fleet.failures", bucket_pods=vp) as t_fail:
+            fixed_pos = [pos for pos, i in enumerate(idxs)
+                         if resolved[i][1].failures is not None
+                         and not resolved[i][1].failures.resolve]
+            scen_of, ejobs = {}, []
+            for pos in fixed_pos:
+                i = idxs[pos]
+                j, cc, sc = resolved[i]
+                scen, masks = sample_masks(j.fabric, cc.failures)
+                scen_of[i] = scen
+                ejobs.append(EvalJob(
+                    blocks=blocks_fleet[pos], weights=w_fleet[pos],
+                    caps=caps_fleet[pos],
+                    masks=scatter_pad(masks, slots_fleet[pos], cp, axis=1),
+                    loss_seeds=seeds_fleet[pos],
+                    native_blocks=native_blocks_fleet[pos],
+                    slots=slots_fleet[pos]))
+            if ejobs:
+                per_job = contingency_metrics_jobs(
+                    ejobs, cc0.overload_threshold, backend=cc0.backend,
+                    loss_cfg=cc0.loss, interval_seconds=key[-1] * 60.0)
+                for pos, ms in zip(fixed_pos, per_job):
+                    i = idxs[pos]
+                    j, cc, sc = resolved[i]
+                    rep = report_from_metrics(scen_of[i], ms, resolve=False)
+                    cont_of[i] = rep
+                    obs.event("failures.evaluated", fabric=j.fabric.name,
+                              n_scenarios=rep.n_scenarios, resolve=False,
+                              worst_p999_mlu=rep.worst_p999_mlu,
+                              worst_p999_loss=rep.worst_p999_loss)
+            for pos, i in enumerate(idxs):
+                j, cc, sc = resolved[i]
+                if cc.failures is None or not cc.failures.resolve:
+                    continue
+                art = arts[i]
+                slots = slots_fleet[pos]
+                w_nat = w_items[pos][:, slots][:, :, slots]
+                (blocks, block_w, block_caps, loss_seeds,
+                 block_epoch) = plan_score_blocks(j.trace, art, w_nat,
+                                                  art.caps, cc)
+                ep_idx = np.asarray(block_epoch)
+                cont_of[i] = evaluate_plan(
+                    j.fabric, cc, sc, blocks, np.stack(block_w),
+                    np.stack(block_caps),
+                    loss_seeds if cc.loss is not None else None,
+                    key[-1] * 60.0,
+                    tms_blocks=art.tms_padded(m)[ep_idx],
+                    deltas=art.deltas[ep_idx])
+        fail_share = t_fail.seconds / max(len(cont_of), 1)
+
     for pos, i in enumerate(idxs):
         j, cc, sc = resolved[i]
         art = arts[i]
         metrics = metrics_fleet[pos]
+        summary = summarize(metrics)
+        if i in cont_of:
+            summary.update(cont_of[i].summary_update())
         phases = obs.PhaseTimes()
         phases.add("plan", art.plan_seconds)
         if art.transition_seconds:
@@ -249,10 +330,12 @@ def _run_bucket(key, idxs, resolved, arts, results, mesh):
         phases.add("solve", solve_s / len(idxs))
         phases.add("anchor", anchor_share)
         phases.add("score", t_score.seconds / len(idxs))
+        if i in cont_of:
+            phases.add("failures", fail_share)
         results[i] = ControllerResult(
             strategy=j.strategy,
             metrics=metrics,
-            summary=summarize(metrics),
+            summary=summary,
             n_routing_updates=art.plan.n_routing,
             n_topology_updates=art.n_topology,
             final_topology=np.asarray(art.n_realized),
@@ -262,18 +345,24 @@ def _run_bucket(key, idxs, resolved, arts, results, mesh):
             transition_log=art.transition_log,
             stage_times=phases.times,
             solver_stats=stats_of[i],
+            contingency=cont_of.get(i),
         )
 
 
 def predict_fleet(fleet, cc=None, sc=None, cushion: float = 0.05,
                   strategies: tuple = STRATEGIES, objective: str = "mlu",
-                  mesh="auto", pod_quantum: int = 4) -> list:
+                  mesh="auto", pod_quantum: int = 4,
+                  contingency_weight: float | None = None) -> list:
     """Fleet-batched :func:`repro.core.predictor.predict`: simulate every
     strategy on every fabric's training window in one :func:`run_fleet` call
     and apply the operator objective per fabric.
 
     Args:
       fleet: list of ``(fabric, training_trace)`` pairs.
+      contingency_weight: with ``cc.failures`` set, blend each strategy's
+        expected-case and worst-contingency objective through
+        :func:`repro.failures.policy.pick_best_contingency`; ``None``
+        (default) keeps the legacy expected-case selection.
 
     Returns a list of :class:`~repro.core.predictor.Prediction`, in order.
     """
@@ -288,7 +377,8 @@ def predict_fleet(fleet, cc=None, sc=None, cushion: float = 0.05,
     for fi, (fabric, trace) in enumerate(fleet):
         per = {strategies[si].name: res[fi * k + si].summary
                for si in range(k)}
-        choice = pick_best(per, cushion, objective=objective)
+        choice = pick_best(per, cushion, objective=objective,
+                           contingency_weight=contingency_weight)
         by_name = {s.name: s for s in strategies}
         obs.event("predictor.strategy_choice", fabric=fabric.name,
                   strategy=choice, hedging=by_name[choice].hedging)

@@ -33,7 +33,8 @@ class Prediction:
 
 
 def pick_best(per_strategy: dict, cushion: float = 0.05,
-              objective: str = "mlu") -> str:
+              objective: str = "mlu",
+              contingency_weight: float | None = None) -> str:
     """Operator objective (paper §4.6).
 
     ``objective="mlu"``: among strategies with p99.9 MLU within ``cushion``
@@ -44,7 +45,18 @@ def pick_best(per_strategy: dict, cushion: float = 0.05,
     all-zero-loss tie falls through cleanly), pick the lowest p99.9 MLU,
     breaking remaining ties by p99.9 ALU.  Requires summaries produced with
     loss tracking on (``p999_loss`` present).
+
+    ``contingency_weight`` (failure-aware extension, requires summaries
+    carrying the ``cont_*`` keys from a run with ``ControllerConfig.failures``
+    set) scores each strategy by ``(1-w)·expected + w·worst-contingency``
+    instead — see :func:`repro.failures.policy.pick_best_contingency`.
+    ``None`` (default) is the legacy expected-case selection, bit-identical.
     """
+    if contingency_weight is not None:
+        from repro.failures.policy import pick_best_contingency
+
+        return pick_best_contingency(per_strategy, cushion, objective,
+                                     contingency_weight)
     if objective == "loss":
         if any("p999_loss" not in v for v in per_strategy.values()):
             raise ValueError(
@@ -72,6 +84,7 @@ def predict(
     cushion: float = 0.05,
     strategies: tuple = STRATEGIES,
     objective: str = "mlu",
+    contingency_weight: float | None = None,
 ) -> Prediction:
     """Simulate each strategy over the training window and pick the winner."""
     from repro import obs
@@ -82,7 +95,8 @@ def predict(
         res: ControllerResult = run_controller(fabric, training, strat, cc, sc)
         per[strat.name] = res.summary
         by_name[strat.name] = strat
-    choice = pick_best(per, cushion, objective=objective)
+    choice = pick_best(per, cushion, objective=objective,
+                       contingency_weight=contingency_weight)
     obs.event("predictor.strategy_choice", fabric=fabric.name,
               strategy=choice, hedging=by_name[choice].hedging)
     return Prediction(fabric=fabric.name, strategy=by_name[choice],

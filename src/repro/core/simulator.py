@@ -105,6 +105,14 @@ def route_metrics(
     """
     demand = np.asarray(demand, dtype=np.float64)
     cap = np.asarray(capacities, dtype=np.float64)
+    # Dead links (capacity exactly 0 — masked out by a failure scenario or a
+    # transition drain) carry no utilization: they are excluded from MLU and
+    # from the ALU/OLR live-link averages on every backend (the batched/fleet
+    # kernel wrappers already work on live-masked inv_cap).  Demand whose
+    # weights still point at a dead link is NOT rerouted here — it counts in
+    # stretch/total load as offered, and the burst-loss queue model drops it
+    # (zero buffer drain), so failures surface as loss, never as inf/NaN MLU.
+    # An all-dead capacity vector defines MLU/ALU/OLR = 0.
     live = cap > 1e-9
     if backend == "pallas":
         from repro.kernels.linkload import ops as llops
@@ -116,17 +124,23 @@ def route_metrics(
         import jax.numpy as jnp
 
         load = jnp.asarray(demand) @ jnp.asarray(weights)  # (T, E) once
-        util = load[:, live] / jnp.asarray(cap[live])[None, :]
-        mlu = np.asarray(util.max(axis=1))
-        alu = np.asarray(util.mean(axis=1))
-        olr = np.asarray((util > overload_threshold).mean(axis=1))
+        if live.any():
+            util = load[:, live] / jnp.asarray(cap[live])[None, :]
+            mlu = np.asarray(util.max(axis=1))
+            alu = np.asarray(util.mean(axis=1))
+            olr = np.asarray((util > overload_threshold).mean(axis=1))
+        else:
+            mlu = alu = olr = np.zeros(demand.shape[0])
         load_tot = np.asarray(load.sum(axis=1))
     else:
         load = demand @ weights  # (T, E_d)
-        util = load[:, live] / cap[None, live]
-        mlu = util.max(axis=1)
-        alu = util.mean(axis=1)
-        olr = (util > overload_threshold).mean(axis=1)
+        if live.any():
+            util = load[:, live] / cap[None, live]
+            mlu = util.max(axis=1)
+            alu = util.mean(axis=1)
+            olr = (util > overload_threshold).mean(axis=1)
+        else:
+            mlu = alu = olr = np.zeros(demand.shape[0])
         load_tot = load.sum(axis=1)
     tot_dem = demand.sum(axis=1)
     stretch = np.where(tot_dem > 1e-12, load_tot / np.maximum(tot_dem, 1e-12), 1.0)

@@ -1,0 +1,29 @@
+"""Failure-scenario subsystem: sampled contingencies as capacity masks,
+evaluated through the batched scoring stack as one extra leading vmap axis,
+with failure-aware reconfiguration and strategy-selection policies.
+
+Entry points: set :class:`FailureConfig` on ``ControllerConfig.failures``
+(all three engines attach a :class:`ContingencyReport`), or drive the pieces
+directly — :func:`sample_scenarios` → :func:`directed_masks` →
+:func:`evaluate_plan`.
+"""
+
+from repro.failures.config import FailureConfig
+from repro.failures.evaluate import (ContingencyReport, contingency_metrics,
+                                     contingency_metrics_jobs, evaluate_plan,
+                                     EvalJob, report_from_metrics,
+                                     resolve_weights)
+from repro.failures.mask import directed_masks, sample_masks
+from repro.failures.policy import (fixed_mlu_under_masks,
+                                   pick_best_contingency,
+                                   transition_worst_case)
+from repro.failures.scenarios import (panel_fractions, sample_scenarios,
+                                      scenario_seed, ScenarioSet)
+
+__all__ = [
+    "FailureConfig", "ScenarioSet", "scenario_seed", "sample_scenarios",
+    "panel_fractions", "directed_masks", "sample_masks", "EvalJob",
+    "ContingencyReport", "contingency_metrics", "contingency_metrics_jobs",
+    "report_from_metrics", "resolve_weights", "evaluate_plan",
+    "pick_best_contingency", "fixed_mlu_under_masks", "transition_worst_case",
+]

@@ -72,6 +72,9 @@ class SolverStats:
     tol: float
     stages: dict  # stage name ("stage1"/"stage2"/"stage3") -> StageStats
     anchor_seconds: float = 0.0
+    # epochs whose PDHG output came back non-finite (NaN/Inf — e.g. vanishing
+    # residual capacity under failure masks) and were re-solved via scipy
+    n_fallbacks: int = 0
 
     @property
     def n_solves(self) -> int:
@@ -92,13 +95,15 @@ class SolverStats:
             "max_iters": int(self.max_iters),
             "tol": float(self.tol),
             "anchor_seconds": round(float(self.anchor_seconds), 6),
+            "n_fallbacks": int(self.n_fallbacks),
             "frac_capped": round(self.frac_capped(), 6),
             "stages": {k: v.to_dict(self.max_iters, per_epoch)
                        for k, v in self.stages.items()},
         }
 
     @classmethod
-    def from_pdhg(cls, raws: list, max_iters: int, tol: float) -> "SolverStats":
+    def from_pdhg(cls, raws: list, max_iters: int, tol: float,
+                  n_fallbacks: int = 0) -> "SolverStats":
         """Build from one or more raw ``stats`` blocks returned by
         ``solve_routing_batch`` / ``solve_routing_fleet`` (concatenated in
         order — e.g. the sequential engine's one-epoch batches)."""
@@ -129,7 +134,8 @@ class SolverStats:
                         prev.gaps + tuple(gaps.tolist()),
                         prev.restarts + tuple(restarts.tolist()))
         return cls(backend="pdhg", max_iters=int(max_iters), tol=float(tol),
-                   stages=stages, anchor_seconds=anchor_s)
+                   stages=stages, anchor_seconds=anchor_s,
+                   n_fallbacks=int(n_fallbacks))
 
     @classmethod
     def merge(cls, parts: list) -> "SolverStats | None":
@@ -147,7 +153,8 @@ class SolverStats:
         return cls(backend=parts[0].backend,
                    max_iters=max(p.max_iters for p in parts),
                    tol=max(p.tol for p in parts), stages=stages,
-                   anchor_seconds=sum(p.anchor_seconds for p in parts))
+                   anchor_seconds=sum(p.anchor_seconds for p in parts),
+                   n_fallbacks=sum(p.n_fallbacks for p in parts))
 
 
 def slice_raw_stats(raw: dict, lo: int, hi: int,

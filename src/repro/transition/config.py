@@ -54,7 +54,10 @@ class TransitionConfig:
 
 
 def should_reconfigure(benefit: float, disruption: float,
-                       hysteresis: float = 0.0) -> bool:
+                       hysteresis: float = 0.0, *,
+                       contingency_weight: float | None = None,
+                       benefit_worst: float | None = None,
+                       disruption_worst: float | None = None) -> bool:
     """The §4.6 robust decision: apply a topology update iff its predicted
     steady-state gain beats the transition's predicted disruption.
 
@@ -67,10 +70,25 @@ def should_reconfigure(benefit: float, disruption: float,
         integrated over the transition's staged intervals (same units).
       hysteresis: extra margin the benefit must clear, as a fraction of the
         disruption (0 = break even).
+      contingency_weight / benefit_worst / disruption_worst: failure-aware
+        extension (:mod:`repro.failures.policy`).  With a weight ``w`` and
+        the worst-contingency pair (min-over-scenarios benefit,
+        max-over-scenarios disruption), the rule is applied to the blends
+        ``(1-w)·expected + w·worst``.  ``contingency_weight=None`` (default)
+        ignores the worst-case pair entirely — bit-identical legacy
+        arithmetic, and ``w=0`` agrees with it exactly since
+        ``(1-0)·x + 0·y == x``.
 
     A non-positive benefit never reconfigures; a zero-disruption transition
     (e.g. no jumper moves) reconfigures whenever the benefit is positive.
     """
+    if contingency_weight is not None:
+        if benefit_worst is None or disruption_worst is None:
+            raise ValueError(
+                "contingency_weight needs benefit_worst and disruption_worst")
+        w = float(contingency_weight)
+        benefit = (1.0 - w) * benefit + w * benefit_worst
+        disruption = (1.0 - w) * disruption + w * disruption_worst
     if not benefit > 0.0:
         return False
     return benefit > (1.0 + hysteresis) * disruption

@@ -50,6 +50,12 @@ class TransitionEval:
     proxy_worst_naive: float  # worst-stage proxy MLU of the naive order
     stage_intervals: int
     horizon_intervals: int
+    # fixed-routing inputs of the failure-aware gate (repro.failures.policy.
+    # transition_worst_case): the old/new steady weight matrices and the
+    # capacities they were solved against, stacked [old, new].  None only on
+    # evals predating the failures subsystem (e.g. hand-built test fixtures).
+    steady_w: np.ndarray | None = None  # (2, C, E_d)
+    steady_caps: np.ndarray | None = None  # (2, E_d)
 
     @property
     def n_stages(self) -> int:
@@ -190,6 +196,8 @@ def evaluate_transition(fabric: Fabric, tms: np.ndarray, n_old: np.ndarray,
         proxy_worst_naive=proxy_naive,
         stage_intervals=tcfg.stage_intervals,
         horizon_intervals=horizon_intervals,
+        steady_w=routing_weight_matrices(paths, f_b[:2]),
+        steady_caps=caps_b[:2],
     )
 
 

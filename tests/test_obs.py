@@ -24,7 +24,8 @@ CC = ControllerConfig(routing_interval_hours=12.0, topology_interval_days=3.0,
                       aggregation_days=3.0, k_critical=4)
 SC = SolverConfig(stage1_method="scaled")
 P999 = ("p999_mlu", "p999_alu", "p999_olr", "p999_stretch")
-PHASE_KEYS = {"plan", "anchor", "solve", "score", "transition"}
+PHASE_KEYS = {"plan", "anchor", "solve", "score", "transition",
+              "failures"}
 
 
 @pytest.fixture(autouse=True)
@@ -104,7 +105,7 @@ def test_stage_times_schema_across_engines(tiny_fabric, tiny_trace):
     d = st.to_dict(per_epoch=True)
     assert len(d["stages"]["stage1"]["iters"]) == s1.n
     assert set(d) == {"backend", "max_iters", "tol", "anchor_seconds",
-                      "frac_capped", "stages"}
+                      "n_fallbacks", "frac_capped", "stages"}
     # summaries are JSON-serializable as stamped into bench artifacts
     json.dumps(d)
 
