@@ -60,7 +60,14 @@ def _params(scale: str) -> dict:
 
 
 def _run(scale: str) -> dict:
+    from repro.obs import audit, metrics as obs_metrics
+
     p = _params(scale)
+    # fleet metrics + decision audit ride along and are stamped into the
+    # artifact (_metrics/_audit) — the repro.obs.health CLI input
+    was_m, was_a = obs_metrics.enabled(), audit.enabled()
+    obs_metrics.clear(), audit.clear()
+    obs_metrics.enable(), audit.enable()
     cc_base = ControllerConfig(
         routing_interval_hours=p["routing_interval_hours"],
         topology_interval_days=p["topology_interval_days"],
@@ -145,7 +152,14 @@ def _run(scale: str) -> dict:
             class_worst(r, HEDGED, top) for r in vol)) if vol
             else float("nan")),
     }
-    return {"rows": rows, "aggregate": agg}
+    snap = obs_metrics.snapshot()
+    audit_recs = audit.records()
+    if not was_m:
+        obs_metrics.disable()
+    if not was_a:
+        audit.disable()
+    return {"rows": rows, "aggregate": agg, "_metrics": snap,
+            "_audit": audit_recs}
 
 
 def run(force: bool = False, scale: str | None = None) -> dict:
@@ -170,10 +184,27 @@ def main() -> None:
                     help="ignore cached results")
     ap.add_argument("--json", type=str, default=None,
                     help="also write the result to this JSON file")
+    ap.add_argument("--trace", type=str, default=None, metavar="TRACE.jsonl",
+                    help="enable repro.obs tracing and export the span trace "
+                         "as JSONL here (plus a Perfetto-loadable "
+                         "*.chrome.json alongside)")
     args = ap.parse_args()
+    if args.trace:
+        from repro import obs
+        obs.enable()
     t0 = time.time()
     out = run(force=args.force, scale="tiny" if args.tiny else None)
     finalize(out, t0)
+    if args.trace:
+        trace_path = pathlib.Path(args.trace)
+        obs.export_jsonl(trace_path)
+        chrome = trace_path.with_suffix(".chrome.json")
+        obs.export_chrome_trace(chrome)
+        n_drop = obs.dropped()
+        print(f"trace: {len(obs.events())} events -> {trace_path} "
+              f"(chrome: {chrome})"
+              + (f"; WARNING: {n_drop} oldest events dropped" if n_drop
+                 else ""))
     print(json.dumps(out["aggregate"], indent=2))
     for r in out["rows"]:
         top = len(r["p_link_levels"]) - 1

@@ -139,6 +139,9 @@ def _speedup_study(scale: str) -> dict:
 
 
 def _run(scale: str) -> dict:
+    from repro.obs import audit, metrics as obs_metrics
+    from repro.obs.quality import snapshot_quality
+
     p = FLEET_PARAMS[scale]
     cc = ControllerConfig(routing_interval_hours=p["routing_interval_hours"],
                           topology_interval_days=p["topology_interval_days"],
@@ -154,12 +157,25 @@ def _run(scale: str) -> dict:
                  n_fabrics=p["n_fabrics"])]
 
     # ---- figures: the whole fleet study in two fleet batches ----------------
+    # fleet metrics + decision audit ride along and are stamped into the
+    # artifact (_metrics/_audit) — the repro.obs.health CLI input.  Scoped to
+    # the figures sweep so the speedup study's duplicate re-runs don't
+    # double-count the fleet's decision/interval series.
+    was_m, was_a = obs_metrics.enabled(), audit.enabled()
+    obs_metrics.clear(), audit.clear()
+    obs_metrics.enable(), audit.enable()
     t0 = time.time()
     preds = predict_fleet([(fabric, train) for _, fabric, _, train, _ in fleet],
                           cc, sc)
     fleet_res = run_fleet([FleetJob(fabric, test, preds[i].strategy, cc, sc)
                            for i, (_, fabric, _, _, test) in enumerate(fleet)])
     figures_s = time.time() - t0
+    snap = obs_metrics.snapshot()
+    audit_recs = audit.records()
+    if not was_m:
+        obs_metrics.disable()
+    if not was_a:
+        audit.disable()
 
     rows = []
     from repro.core.traffic import (skew_fraction_for_share,
@@ -220,8 +236,20 @@ def _run(scale: str) -> dict:
         "phase_s": {k: round(sum(r["stage_times"].get(k, 0.0) for r in rows), 4)
                     for k in ("plan", "anchor", "solve", "score", "transition")},
     }
+    # prediction-quality headline of the whole figures sweep (training +
+    # test), read back from the stamped metrics snapshot — the regression
+    # gate watches predictor_coverage (a drop means the critical-TM
+    # abstraction stopped covering realized demand)
+    q = snapshot_quality(snap)
+    agg["metrics"] = {
+        "predictor_coverage": round(q["coverage_ratio"], 4),
+        "predictor_hit_rate": round(q["hit_rate"], 4),
+        "n_quality_intervals": q["n_intervals"],
+        "n_audit_records": len(audit_recs),
+    }
     agg.update(study)
-    return {"rows": rows, "aggregate": agg}
+    return {"rows": rows, "aggregate": agg, "_metrics": snap,
+            "_audit": audit_recs}
 
 
 def run(force: bool = False, scale: str | None = None) -> dict:
@@ -245,10 +273,27 @@ def main() -> None:
     ap.add_argument("--force", action="store_true", help="ignore cached results")
     ap.add_argument("--json", type=str, default=None,
                     help="also write the result to this JSON file")
+    ap.add_argument("--trace", type=str, default=None, metavar="TRACE.jsonl",
+                    help="enable repro.obs tracing and export the span trace "
+                         "as JSONL here (plus a Perfetto-loadable "
+                         "*.chrome.json alongside)")
     args = ap.parse_args()
+    if args.trace:
+        from repro import obs
+        obs.enable()
     t0 = time.time()
     out = run(force=args.force, scale="tiny" if args.tiny else None)
     finalize(out, t0)
+    if args.trace:
+        trace_path = pathlib.Path(args.trace)
+        obs.export_jsonl(trace_path)
+        chrome = trace_path.with_suffix(".chrome.json")
+        obs.export_chrome_trace(chrome)
+        n_drop = obs.dropped()
+        print(f"trace: {len(obs.events())} events -> {trace_path} "
+              f"(chrome: {chrome})"
+              + (f"; WARNING: {n_drop} oldest events dropped" if n_drop
+                 else ""))
     agg = out["aggregate"]
     print(json.dumps(agg, indent=2))
     for r in out["rows"]:

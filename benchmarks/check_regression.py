@@ -71,8 +71,13 @@ SPECS = {
         "time": ["aggregate.fleet_warm_s", "aggregate.figures_s", "_wall_s"],
         "phase_time": ["aggregate.phase_s.solve", "aggregate.phase_s.score"],
         "lower": [("aggregate.max_parity_rel_delta", 1e-4)],
+        # predictor_coverage comes from the stamped metrics snapshot
+        # (repro.obs.metrics): realized-vs-predicted coverage of the whole
+        # figures sweep — a drop means the critical-TM abstraction stopped
+        # covering realized demand
         "higher": [("aggregate.mlu_improvement_vs_vlb", 0.02),
-                   ("aggregate.frac_gemini_feasible", 0.0)],
+                   ("aggregate.frac_gemini_feasible", 0.0),
+                   ("aggregate.metrics.predictor_coverage", 0.05)],
     },
     "BENCH_failures.json": {
         "time": ["_wall_s"],

@@ -185,10 +185,16 @@ def run_controller(
             if apply:
                 n_realized, cap = cand, cand_cap
                 n_topology += 1
-                obs.event("controller.topology_applied", start=start)
+                obs.event("controller.topology_applied", start=start,
+                          fabric=fabric.name)
+                obs.metrics.inc("controller.topology_updates",
+                                fabric=fabric.name, outcome="applied")
             else:
                 n_skipped += 1
-                obs.event("controller.topology_skipped", start=start)
+                obs.event("controller.topology_skipped", start=start,
+                          fabric=fabric.name)
+                obs.metrics.inc("controller.topology_updates",
+                                fabric=fabric.name, outcome="skipped")
             next_topo = start + topo_step
             # routing must target the *realized* (integer) capacities
             with phases("solve"):
@@ -217,6 +223,7 @@ def run_controller(
         with phases("score"):
             w = routing_weight_matrix(paths, sol.f)
             block = trace.demand[start : start + route_step]
+            obs.quality.record_epoch_quality(fabric.name, tms, block)
             rem_lo, rem_seed = 0, (cc.loss.seed + start if cc.loss is not None
                                    else None)
             if staged is not None:
@@ -271,6 +278,7 @@ def run_controller(
                         if cc.failures.resolve else None))
             summary.update(contingency.summary_update())
 
+    obs.quality.record_interval_metrics(fabric.name, metrics)
     solver_stats = None
     if pdhg_raws:
         solver_stats = obs.SolverStats.from_pdhg(
@@ -324,10 +332,11 @@ def _transition_gate(fabric, tms, n_old, n_new, tc, cc, sc, *,
             apply = should_reconfigure(
                 ev.benefit, ev.disruption, tc.hysteresis,
                 contingency_weight=fcfg.contingency_weight,
-                benefit_worst=b_w, disruption_worst=d_w)
+                benefit_worst=b_w, disruption_worst=d_w,
+                fabric=fabric.name)
         else:
             apply = should_reconfigure(ev.benefit, ev.disruption,
-                                       tc.hysteresis)
+                                       tc.hysteresis, fabric=fabric.name)
     else:
         apply = True
     staged = ev if apply and not tc.instantaneous else None

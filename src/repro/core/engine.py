@@ -195,6 +195,8 @@ def pdhg_finite_fallback(fabric, tms_seq, caps_b, deltas_b, sc,
             u_i = np.inf
         f_b[i], u_b[i] = f_i, u_i
     obs.event("solver.nonfinite_fallback", fabric=fabric.name, n=n_bad)
+    obs.metrics.inc("solver.nonfinite_fallbacks", float(n_bad),
+                    fabric=fabric.name)
     return f_b, u_b, n_bad
 
 
@@ -273,10 +275,16 @@ def plan_artifacts(fabric: Fabric, trace: Trace, strategy: Strategy,
                 if apply:
                     n_realized, cap = cand, cand_cap
                     n_topology += 1
-                    obs.event("controller.topology_applied", start=ep.start)
+                    obs.event("controller.topology_applied", start=ep.start,
+                              fabric=fabric.name)
+                    obs.metrics.inc("controller.topology_updates",
+                                    fabric=fabric.name, outcome="applied")
                 else:
                     n_skipped += 1
-                    obs.event("controller.topology_skipped", start=ep.start)
+                    obs.event("controller.topology_skipped", start=ep.start,
+                              fabric=fabric.name)
+                    obs.metrics.inc("controller.topology_updates",
+                                    fabric=fabric.name, outcome="skipped")
             elif cap is None:
                 n0 = uniform_topology(fabric)
                 n_realized = (realize(fabric, n0)[0]
@@ -397,6 +405,13 @@ def execute_plan(fabric: Fabric, trace: Trace, strategy: Strategy,
             interval_seconds=trace.interval_minutes * 60.0)
 
     summary = summarize(metrics)
+    if obs.metrics.enabled():
+        # fleet metrics ride along outside the scoring arithmetic: realized
+        # per-interval distributions plus per-epoch prediction quality
+        obs.quality.record_interval_metrics(fabric.name, metrics)
+        for ep, tms in zip(art.plan.epochs, art.tms):
+            obs.quality.record_epoch_quality(
+                fabric.name, tms, trace.demand[ep.start: ep.stop])
 
     # ---- contingency analysis (optional; cc.failures=None skips) ------------
     contingency = None

@@ -264,7 +264,8 @@ def _run_bucket(key, idxs, resolved, arts, results, mesh):
         from repro.failures import (evaluate_plan, report_from_metrics,
                                     sample_masks)
         from repro.failures.evaluate import (EvalJob,
-                                             contingency_metrics_jobs)
+                                             contingency_metrics_jobs,
+                                             record_contingency_gauges)
 
         with obs.timed("fleet.failures", bucket_pods=vp) as t_fail:
             fixed_pos = [pos for pos, i in enumerate(idxs)
@@ -296,6 +297,7 @@ def _run_bucket(key, idxs, resolved, arts, results, mesh):
                               n_scenarios=rep.n_scenarios, resolve=False,
                               worst_p999_mlu=rep.worst_p999_mlu,
                               worst_p999_loss=rep.worst_p999_loss)
+                    record_contingency_gauges(j.fabric.name, rep)
             for pos, i in enumerate(idxs):
                 j, cc, sc = resolved[i]
                 if cc.failures is None or not cc.failures.resolve:
@@ -321,6 +323,11 @@ def _run_bucket(key, idxs, resolved, arts, results, mesh):
         art = arts[i]
         metrics = metrics_fleet[pos]
         summary = summarize(metrics)
+        if obs.metrics.enabled():
+            obs.quality.record_interval_metrics(j.fabric.name, metrics)
+            for ep, tms in zip(art.plan.epochs, art.tms):
+                obs.quality.record_epoch_quality(
+                    j.fabric.name, tms, j.trace.demand[ep.start: ep.stop])
         if i in cont_of:
             summary.update(cont_of[i].summary_update())
         phases = obs.PhaseTimes()
@@ -378,7 +385,8 @@ def predict_fleet(fleet, cc=None, sc=None, cushion: float = 0.05,
         per = {strategies[si].name: res[fi * k + si].summary
                for si in range(k)}
         choice = pick_best(per, cushion, objective=objective,
-                           contingency_weight=contingency_weight)
+                           contingency_weight=contingency_weight,
+                           fabric=fabric.name)
         by_name = {s.name: s for s in strategies}
         obs.event("predictor.strategy_choice", fabric=fabric.name,
                   strategy=choice, hedging=by_name[choice].hedging)

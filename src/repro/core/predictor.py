@@ -20,8 +20,14 @@ from repro.core.controller import ControllerConfig, ControllerResult, run_contro
 from repro.core.graph import Fabric
 from repro.core.solver import STRATEGIES, SolverConfig, Strategy
 from repro.core.traffic import Trace
+from repro.obs import audit, metrics
 
 __all__ = ["Prediction", "predict", "pick_best"]
+
+# summary keys the operator objective can consume — the audit record keeps
+# exactly these per strategy, which makes the record replayable on its own
+_OBJECTIVE_KEYS = ("p999_mlu", "p999_alu", "p999_loss",
+                   "cont_worst_p999_mlu", "cont_worst_p999_loss")
 
 
 @dataclasses.dataclass
@@ -32,26 +38,9 @@ class Prediction:
     cushion: float
 
 
-def pick_best(per_strategy: dict, cushion: float = 0.05,
-              objective: str = "mlu",
-              contingency_weight: float | None = None) -> str:
-    """Operator objective (paper §4.6).
-
-    ``objective="mlu"``: among strategies with p99.9 MLU within ``cushion``
-    of the minimum, pick the lowest p99.9 ALU.
-
-    ``objective="loss"``: among strategies with p99.9 loss fraction within
-    ``cushion`` of the minimum (relative, with a 1e-6 absolute floor so an
-    all-zero-loss tie falls through cleanly), pick the lowest p99.9 MLU,
-    breaking remaining ties by p99.9 ALU.  Requires summaries produced with
-    loss tracking on (``p999_loss`` present).
-
-    ``contingency_weight`` (failure-aware extension, requires summaries
-    carrying the ``cont_*`` keys from a run with ``ControllerConfig.failures``
-    set) scores each strategy by ``(1-w)·expected + w·worst-contingency``
-    instead — see :func:`repro.failures.policy.pick_best_contingency`.
-    ``None`` (default) is the legacy expected-case selection, bit-identical.
-    """
+def _select(per_strategy: dict, cushion: float, objective: str,
+            contingency_weight: float | None) -> str:
+    """The pure selection rule (no recording) — see :func:`pick_best`."""
     if contingency_weight is not None:
         from repro.failures.policy import pick_best_contingency
 
@@ -76,6 +65,81 @@ def pick_best(per_strategy: dict, cushion: float = 0.05,
     return min(eligible, key=lambda k: (per_strategy[k]["p999_alu"], k))
 
 
+def _objective_value(summary: dict, objective: str,
+                     contingency_weight: float | None) -> float:
+    """The ranked metric a strategy was scored by (blended when weighted)."""
+    exp_key = "p999_loss" if objective == "loss" else "p999_mlu"
+    val = float(summary[exp_key])
+    if contingency_weight is not None:
+        worst_key = ("cont_worst_p999_loss" if objective == "loss"
+                     else "cont_worst_p999_mlu")
+        w = float(contingency_weight)
+        val = (1.0 - w) * val + w * float(summary[worst_key])
+    return val
+
+
+def _record_choice(per_strategy: dict, cushion: float, objective: str,
+                   contingency_weight: float | None, fabric: str | None,
+                   choice: str) -> None:
+    if metrics.enabled():
+        metrics.inc("predictor.choices", fabric=fabric or "", strategy=choice)
+    if not audit.enabled():
+        return
+    runner_up = None
+    if len(per_strategy) > 1:
+        rest = {k: v for k, v in per_strategy.items() if k != choice}
+        runner_up = _select(rest, cushion, objective, contingency_weight)
+    audit.record(
+        "pick_best", fabric=fabric, objective=objective,
+        cushion=float(cushion),
+        contingency_weight=(None if contingency_weight is None
+                            else float(contingency_weight)),
+        per_strategy={k: {key: float(v[key]) for key in _OBJECTIVE_KEYS
+                          if key in v}
+                      for k, v in per_strategy.items()},
+        chosen=choice,
+        chosen_objective=_objective_value(per_strategy[choice], objective,
+                                          contingency_weight),
+        runner_up=runner_up,
+        runner_up_objective=(None if runner_up is None else _objective_value(
+            per_strategy[runner_up], objective, contingency_weight)))
+
+
+def pick_best(per_strategy: dict, cushion: float = 0.05,
+              objective: str = "mlu",
+              contingency_weight: float | None = None, *,
+              fabric: str | None = None) -> str:
+    """Operator objective (paper §4.6).
+
+    ``objective="mlu"``: among strategies with p99.9 MLU within ``cushion``
+    of the minimum, pick the lowest p99.9 ALU.
+
+    ``objective="loss"``: among strategies with p99.9 loss fraction within
+    ``cushion`` of the minimum (relative, with a 1e-6 absolute floor so an
+    all-zero-loss tie falls through cleanly), pick the lowest p99.9 MLU,
+    breaking remaining ties by p99.9 ALU.  Requires summaries produced with
+    loss tracking on (``p999_loss`` present).
+
+    ``contingency_weight`` (failure-aware extension, requires summaries
+    carrying the ``cont_*`` keys from a run with ``ControllerConfig.failures``
+    set) scores each strategy by ``(1-w)·expected + w·worst-contingency``
+    instead — see :func:`repro.failures.policy.pick_best_contingency`.
+    ``None`` (default) is the legacy expected-case selection, bit-identical.
+
+    ``fabric`` labels the decision-audit record and ``predictor.choices``
+    counter (:mod:`repro.obs`); it never affects the selection.  The audit
+    entry carries the objective values consumed (:data:`_OBJECTIVE_KEYS`
+    subset of each summary), the chosen strategy and its score, and the
+    runner-up — the selection re-run with the winner removed — so a recorded
+    decision replays from the entry alone.
+    """
+    choice = _select(per_strategy, cushion, objective, contingency_weight)
+    if audit.enabled() or metrics.enabled():
+        _record_choice(per_strategy, cushion, objective, contingency_weight,
+                       fabric, choice)
+    return choice
+
+
 def predict(
     fabric: Fabric,
     training: Trace,
@@ -96,7 +160,8 @@ def predict(
         per[strat.name] = res.summary
         by_name[strat.name] = strat
     choice = pick_best(per, cushion, objective=objective,
-                       contingency_weight=contingency_weight)
+                       contingency_weight=contingency_weight,
+                       fabric=fabric.name)
     obs.event("predictor.strategy_choice", fabric=fabric.name,
               strategy=choice, hedging=by_name[choice].hedging)
     return Prediction(fabric=fabric.name, strategy=by_name[choice],

@@ -35,7 +35,7 @@ from repro.failures.scenarios import ScenarioSet
 
 __all__ = ["EvalJob", "ContingencyReport", "contingency_metrics",
            "contingency_metrics_jobs", "report_from_metrics",
-           "resolve_weights", "evaluate_plan"]
+           "record_contingency_gauges", "resolve_weights", "evaluate_plan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,6 +190,23 @@ def report_from_metrics(scen: ScenarioSet, metrics: list, resolve: bool,
         n_fallbacks=int(n_fallbacks))
 
 
+def record_contingency_gauges(fabric: str, rep: ContingencyReport) -> None:
+    """Fold a contingency report's worst-case headline numbers into the
+    fleet-metrics registry as per-fabric gauges (last evaluation wins — these
+    are "current survivability posture" signals, not distributions).  No-op
+    when metrics are disabled."""
+    from repro.obs import metrics as obs_metrics
+
+    if not obs_metrics.enabled():
+        return
+    obs_metrics.set_gauge("failures.cont_worst_p999_mlu",
+                          rep.worst_p999_mlu, fabric=fabric)
+    if rep.worst_p999_loss is not None:
+        obs_metrics.set_gauge("failures.cont_worst_p999_loss",
+                              rep.worst_p999_loss, fabric=fabric)
+    obs_metrics.inc("failures.evaluations", fabric=fabric)
+
+
 def resolve_weights(fabric, tms_blocks: np.ndarray, caps: np.ndarray,
                     masks: np.ndarray, deltas: np.ndarray, cc, sc) -> tuple:
     """Re-solve routing per (scenario, block) on the masked capacities.
@@ -265,4 +282,5 @@ def evaluate_plan(fabric, cc, sc, blocks, weights, caps, loss_seeds,
               n_scenarios=rep.n_scenarios, resolve=rep.resolve,
               worst_p999_mlu=rep.worst_p999_mlu,
               worst_p999_loss=rep.worst_p999_loss)
+    record_contingency_gauges(fabric.name, rep)
     return rep

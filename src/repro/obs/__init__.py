@@ -1,26 +1,49 @@
-"""repro.obs — structured tracing, solver telemetry, phase accounting.
+"""repro.obs — tracing, solver telemetry, fleet metrics, decision audit.
 
-Usage::
+Four layers, all off by default, all free when off, and all *invisible* when
+on (nothing here touches jitted computation — enabling any of them leaves
+every numeric result bit-identical, test-enforced):
 
-    from repro import obs
-    obs.enable()
-    ... run a controller / bench ...
-    obs.export_jsonl("trace.jsonl")        # -> python -m repro.obs.report
-    obs.export_chrome_trace("trace.json")  # -> chrome://tracing / Perfetto
+* **Tracing** (:mod:`.trace`): spans / instant events / counters into an
+  in-process ring buffer, exported as JSONL or Chrome ``trace_event`` JSON::
 
-Disabled (the default), :func:`span`/:func:`event`/:func:`counter` are
-single-flag-check no-ops and nothing allocates; enabling tracing never
-changes numeric results (telemetry rides on ordinary solver outputs).
+      from repro import obs
+      obs.enable()
+      ... run a controller / bench ...
+      obs.export_jsonl("trace.jsonl")        # -> python -m repro.obs.report
+      obs.export_chrome_trace("trace.json")  # -> chrome://tracing / Perfetto
+
+* **Solver telemetry** (:mod:`.stats`): per-epoch PDHG convergence effort
+  attached to ``ControllerResult.solver_stats``.
+
+* **Fleet metrics** (:mod:`.metrics` + :mod:`.quality`): labeled counters /
+  gauges / fixed-bucket histograms — per-fabric MLU/loss/stretch series,
+  decision counts, predictor coverage — snapshotted as JSON (stamped into
+  bench artifacts) or Prometheus text::
+
+      obs.metrics.enable()
+      ... run ...
+      snap = obs.metrics.snapshot()          # -> python -m repro.obs.health
+
+* **Decision audit** (:mod:`.audit`): every ``should_reconfigure`` /
+  ``pick_best`` decision with its full input vector, as replayable JSONL::
+
+      obs.audit.enable()
+      ... run ...
+      obs.audit.export_jsonl("audit.jsonl")  # health CLI --audit input
 """
 
+from . import audit, metrics, quality
 from .stats import SolverStats, StageStats, slice_raw_stats
 from .trace import (PhaseTimes, capacity, chrome_trace_events, clear, counter,
-                    disable, enable, enabled, event, events,
-                    export_chrome_trace, export_jsonl, read_jsonl, span, timed)
+                    disable, dropped, enable, enabled, event, events,
+                    export_chrome_trace, export_jsonl, read_jsonl, span,
+                    timed)
 
 __all__ = [
-    "enable", "disable", "enabled", "clear", "capacity", "span", "timed",
-    "event", "counter", "events", "PhaseTimes", "export_jsonl",
+    "enable", "disable", "enabled", "clear", "capacity", "dropped", "span",
+    "timed", "event", "counter", "events", "PhaseTimes", "export_jsonl",
     "export_chrome_trace", "read_jsonl", "chrome_trace_events",
     "SolverStats", "StageStats", "slice_raw_stats",
+    "audit", "metrics", "quality",
 ]

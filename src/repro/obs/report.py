@@ -112,13 +112,21 @@ def main(argv=None) -> int:
     records = read_jsonl(args.trace)
     rows = summarize(records)
     n_inst = sum(1 for r in records if r.get("ph") == "i")
+    n_dropped = sum(int(r.get("args", {}).get("count", 0)) for r in records
+                    if r.get("ph") == "M" and r.get("name") == "trace.dropped")
     if args.json:
         print(json.dumps({"rows": rows, "n_events": len(records),
-                          "n_instants": n_inst}, indent=2))
+                          "n_instants": n_inst, "n_dropped": n_dropped},
+                         indent=2))
     else:
         print(format_table(rows))
         print(f"\n{len(records)} events "
               f"({sum(r['count'] for r in rows)} spans, {n_inst} instants)")
+    if n_dropped:
+        print(f"WARNING: {n_dropped} events were dropped before export "
+              "(ring buffer overflow) — this trace is missing its oldest "
+              "events; raise obs.enable(capacity=...) or export more often.",
+              file=sys.stderr)
     if args.chrome:
         export_chrome_trace(args.chrome, records)
         print(f"chrome trace written to {args.chrome}", file=sys.stderr)

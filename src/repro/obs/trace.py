@@ -39,8 +39,8 @@ import time
 from collections import deque
 
 __all__ = [
-    "enable", "disable", "enabled", "clear", "capacity", "span", "timed",
-    "event", "counter", "events", "PhaseTimes", "export_jsonl",
+    "enable", "disable", "enabled", "clear", "capacity", "dropped", "span",
+    "timed", "event", "counter", "events", "PhaseTimes", "export_jsonl",
     "export_chrome_trace", "read_jsonl", "chrome_trace_events",
 ]
 
@@ -48,14 +48,16 @@ _DEFAULT_CAPACITY = 65536
 
 _enabled = False
 _events: deque = deque(maxlen=_DEFAULT_CAPACITY)  # ring buffer of tuples
+_dropped = 0  # events evicted from the full ring buffer since last clear
 _tls = threading.local()  # per-thread span nesting depth
 
 
 def enable(capacity: int | None = None) -> None:
     """Turn tracing on (optionally resizing the ring buffer, which clears it)."""
-    global _enabled, _events
+    global _enabled, _events, _dropped
     if capacity is not None and capacity != _events.maxlen:
         _events = deque(maxlen=capacity)
+        _dropped = 0
     _enabled = True
 
 
@@ -69,11 +71,32 @@ def enabled() -> bool:
 
 
 def clear() -> None:
+    global _dropped
     _events.clear()
+    _dropped = 0
 
 
 def capacity() -> int:
     return _events.maxlen or 0
+
+
+def dropped() -> int:
+    """Events silently evicted because the ring buffer was full.
+
+    A nonzero count means the exported trace is missing its *oldest* events —
+    raise the capacity (``enable(capacity=...)``) or export more often.  The
+    count rides along in JSONL exports as a ``ph: "M"`` meta record, which
+    the ``repro.obs.report`` CLI surfaces as a warning.
+    """
+    return _dropped
+
+
+def _append(item: tuple) -> None:
+    global _dropped
+    if len(_events) == _events.maxlen:
+        _dropped += 1
+    # deque.append is atomic under the GIL: thread-safe without a lock
+    _events.append(item)
 
 
 def _depth() -> int:
@@ -112,9 +135,8 @@ class _Span:
     def __exit__(self, *exc):
         dur = time.perf_counter_ns() - self.t0
         _tls.depth = self.depth
-        # deque.append is atomic under the GIL: thread-safe without a lock
-        _events.append(("X", self.name, self.t0, dur,
-                        threading.get_ident(), self.depth, self.args))
+        _append(("X", self.name, self.t0, dur,
+                 threading.get_ident(), self.depth, self.args))
         return False
 
 
@@ -153,8 +175,8 @@ class _Timed:
         self.seconds = dur * 1e-9
         if self._rec:
             _tls.depth = self.depth
-            _events.append(("X", self.name, self.t0, dur,
-                            threading.get_ident(), self.depth, self.args))
+            _append(("X", self.name, self.t0, dur,
+                     threading.get_ident(), self.depth, self.args))
         if self._acc is not None:
             self._acc.add(self._key, self.seconds)
         return False
@@ -197,16 +219,16 @@ def event(name: str, **attrs) -> None:
     """Record an instant event (e.g. a controller decision)."""
     if not _enabled:
         return
-    _events.append(("i", name, time.perf_counter_ns(), 0,
-                    threading.get_ident(), _depth(), attrs or None))
+    _append(("i", name, time.perf_counter_ns(), 0,
+             threading.get_ident(), _depth(), attrs or None))
 
 
 def counter(name: str, value: float) -> None:
     """Record a counter sample (rendered as a counter track in Perfetto)."""
     if not _enabled:
         return
-    _events.append(("C", name, time.perf_counter_ns(), 0,
-                    threading.get_ident(), 0, {"value": float(value)}))
+    _append(("C", name, time.perf_counter_ns(), 0,
+             threading.get_ident(), 0, {"value": float(value)}))
 
 
 def events() -> list:
@@ -222,8 +244,17 @@ def events() -> list:
 
 
 def export_jsonl(path=None) -> str:
-    """Serialize the buffer as JSONL (one event object per line)."""
-    lines = [json.dumps(rec, default=str) for rec in events()]
+    """Serialize the buffer as JSONL (one event object per line).
+
+    When events were dropped (ring buffer overflow), a leading ``ph: "M"``
+    meta record carries the count so downstream tooling knows the trace is
+    incomplete."""
+    recs = events()
+    if _dropped:
+        recs.insert(0, {"ph": "M", "name": "trace.dropped", "ts_us": 0.0,
+                        "dur_us": 0.0, "tid": 0, "depth": 0,
+                        "args": {"count": _dropped}})
+    lines = [json.dumps(rec, default=str) for rec in recs]
     text = "\n".join(lines) + ("\n" if lines else "")
     if path is not None:
         with open(path, "w") as fh:
@@ -248,6 +279,8 @@ def chrome_trace_events(records=None) -> list:
     pid = os.getpid()
     out = []
     for r in recs:
+        if r["ph"] == "M":  # repro meta records (e.g. trace.dropped) are not
+            continue  # Chrome metadata events — keep them out of the viewer
         ev = {"ph": r["ph"], "name": r["name"], "cat": "repro", "pid": pid,
               "tid": r["tid"], "ts": r["ts_us"]}
         if r["ph"] == "X":

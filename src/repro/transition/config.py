@@ -1,13 +1,15 @@
 """Transition knobs and the §4.6 "when to reconfigure" decision rule.
 
-Kept dependency-free (dataclasses only) so :mod:`repro.core.controller` can
-import the config without pulling the solver-facing transition machinery into
-its import graph.
+Kept free of solver-facing dependencies (dataclasses + :mod:`repro.obs` only)
+so :mod:`repro.core.controller` can import the config without pulling the
+transition machinery into its import graph.
 """
 
 from __future__ import annotations
 
 import dataclasses
+
+from repro.obs import audit, metrics
 
 __all__ = ["TransitionConfig", "should_reconfigure"]
 
@@ -57,7 +59,8 @@ def should_reconfigure(benefit: float, disruption: float,
                        hysteresis: float = 0.0, *,
                        contingency_weight: float | None = None,
                        benefit_worst: float | None = None,
-                       disruption_worst: float | None = None) -> bool:
+                       disruption_worst: float | None = None,
+                       fabric: str | None = None) -> bool:
     """The §4.6 robust decision: apply a topology update iff its predicted
     steady-state gain beats the transition's predicted disruption.
 
@@ -78,17 +81,43 @@ def should_reconfigure(benefit: float, disruption: float,
         ignores the worst-case pair entirely — bit-identical legacy
         arithmetic, and ``w=0`` agrees with it exactly since
         ``(1-0)·x + 0·y == x``.
+      fabric: label for the decision-audit record and metrics series
+        (:mod:`repro.obs`); never affects the decision.
 
     A non-positive benefit never reconfigures; a zero-disruption transition
     (e.g. no jumper moves) reconfigures whenever the benefit is positive.
+
+    When :mod:`repro.obs.audit` / :mod:`repro.obs.metrics` are enabled, every
+    evaluation is recorded with its full input vector (pre-blend values plus
+    the contingency terms — enough to :func:`repro.obs.audit.replay` it) and
+    counted under ``reconfigure.decisions{outcome, reason}``.
     """
+    b, d = float(benefit), float(disruption)
     if contingency_weight is not None:
         if benefit_worst is None or disruption_worst is None:
             raise ValueError(
                 "contingency_weight needs benefit_worst and disruption_worst")
         w = float(contingency_weight)
-        benefit = (1.0 - w) * benefit + w * benefit_worst
-        disruption = (1.0 - w) * disruption + w * disruption_worst
-    if not benefit > 0.0:
-        return False
-    return benefit > (1.0 + hysteresis) * disruption
+        b = (1.0 - w) * b + w * benefit_worst
+        d = (1.0 - w) * d + w * disruption_worst
+    if not b > 0.0:
+        decision, reason = False, "non_positive_benefit"
+    elif b > (1.0 + hysteresis) * d:
+        decision, reason = True, "benefit_clears_disruption"
+    else:
+        decision, reason = False, "benefit_below_disruption"
+    if audit.enabled():
+        audit.record(
+            "should_reconfigure", fabric=fabric, benefit=float(benefit),
+            disruption=float(disruption), hysteresis=float(hysteresis),
+            contingency_weight=(None if contingency_weight is None
+                                else float(contingency_weight)),
+            benefit_worst=(None if benefit_worst is None
+                           else float(benefit_worst)),
+            disruption_worst=(None if disruption_worst is None
+                              else float(disruption_worst)),
+            decision=decision, reason=reason)
+    if metrics.enabled():
+        metrics.inc("reconfigure.decisions", fabric=fabric or "",
+                    outcome="applied" if decision else "vetoed", reason=reason)
+    return decision

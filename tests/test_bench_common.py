@@ -62,6 +62,7 @@ BASE_FLEET = {
     "aggregate": {"fleet_warm_s": 10.0, "figures_s": 20.0,
                   "max_parity_rel_delta": 1e-6,
                   "mlu_improvement_vs_vlb": 0.5, "frac_gemini_feasible": 1.0,
+                  "metrics": {"predictor_coverage": 0.8},
                   "phase_s": {"plan": 1.0, "anchor": 0.5, "solve": 8.0,
                               "score": 3.0, "transition": 0.0}},
     "_wall_s": 30.0,
@@ -80,6 +81,9 @@ def test_check_passes_identity_and_fails_injected_regressions():
     worse = json.loads(json.dumps(BASE_FLEET))
     worse["aggregate"]["mlu_improvement_vs_vlb"] = 0.1  # quality dropped
     assert check("BENCH_fleet.json", worse, BASE_FLEET)
+    uncov = json.loads(json.dumps(BASE_FLEET))
+    uncov["aggregate"]["metrics"]["predictor_coverage"] = 0.3  # envelope broke
+    assert check("BENCH_fleet.json", uncov, BASE_FLEET)
 
 
 def test_check_calibration_normalizes_slow_runners():

@@ -1,0 +1,482 @@
+"""repro.obs fleet-health layers: metrics, prediction quality, decision
+audit, and the health CLI.
+
+Covers the hard requirements mirroring the tracing contract: enabling
+metrics + audit leaves every controller numeric bit-identical on all three
+engines, the disabled fast path costs well under 2% of a controller run,
+snapshots merge / quantile / export correctly, every audit record replays to
+its recorded outcome after a JSONL round-trip, the audit log agrees with the
+controller's own ``transition_log``, and ``python -m repro.obs.health``
+renders the fleet table end-to-end.
+"""
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import (ControllerConfig, SolverConfig, Strategy,
+                        TransitionConfig, pick_best, run_controller)
+from repro.core.fleet import FLEET_SPECS, make_fabric, make_trace
+from repro.core.fleet_engine import FleetJob, run_fleet
+from repro.obs import audit, metrics, quality
+from repro.obs.health import FLEET, health_report, load_inputs
+from repro.obs.health import main as health_main
+from repro.obs.report import main as report_main
+from repro.transition import should_reconfigure
+
+CC = ControllerConfig(routing_interval_hours=12.0, topology_interval_days=3.0,
+                      aggregation_days=3.0, k_critical=4)
+SC = SolverConfig(stage1_method="scaled")
+P999 = ("p999_mlu", "p999_alu", "p999_olr", "p999_stretch")
+FAB = FLEET_SPECS[0].name
+
+
+@pytest.fixture(autouse=True)
+def _obs_off():
+    """Every test starts and ends with all obs layers disabled and clean."""
+    for mod in (obs, metrics, audit):
+        mod.disable()
+        mod.clear()
+    yield
+    for mod in (obs, metrics, audit):
+        mod.disable()
+        mod.clear()
+
+
+@pytest.fixture(scope="module")
+def tiny_fabric():
+    return make_fabric(FLEET_SPECS[0])
+
+
+@pytest.fixture(scope="module")
+def tiny_trace(tiny_fabric):
+    return make_trace(FLEET_SPECS[0], tiny_fabric, days=5.0,
+                      interval_minutes=240.0)
+
+
+@pytest.fixture(scope="module")
+def gate_trace(tiny_fabric):
+    """Long enough for several gated topology epochs (daily updates)."""
+    return make_trace(FLEET_SPECS[0], tiny_fabric, days=6.0,
+                      interval_minutes=240.0)
+
+
+# daily topology updates + the §4.6 gate, instantaneous staging model so the
+# decision rule fires on every post-warmup epoch while scoring stays cheap
+GATE_CC = dataclasses.replace(
+    CC, routing_interval_hours=24.0, topology_interval_days=1.0,
+    aggregation_days=2.0,
+    transition=TransitionConfig(n_panels=4, stage_intervals=1,
+                                instantaneous=True))
+
+
+def _run(fabric, trace, **over):
+    return run_controller(fabric, trace, Strategy(nonuniform=False,
+                                                  hedging=True),
+                          dataclasses.replace(CC, **over), SC)
+
+
+# ---- metrics registry --------------------------------------------------------
+
+def test_disabled_recording_is_noop():
+    metrics.inc("c", 2.0, fabric="F1")
+    metrics.set_gauge("g", 1.0)
+    metrics.observe("h", 0.5)
+    metrics.observe_many("h", np.arange(4.0))
+    snap = metrics.snapshot()
+    assert snap == {"counters": [], "gauges": [], "histograms": []}
+
+
+def test_counter_gauge_histogram_snapshot():
+    metrics.enable()
+    metrics.inc("decisions", fabric="F1", outcome="applied")
+    metrics.inc("decisions", 2.0, outcome="applied", fabric="F1")  # label order
+    metrics.inc("decisions", fabric="F1", outcome=3)  # values stringified
+    metrics.set_gauge("worst", 0.5, fabric="F1")
+    metrics.set_gauge("worst", 0.7, fabric="F1")  # last write wins
+    metrics.observe_many("mlu", [0.5, 0.7, np.nan, np.inf], fabric="F1")
+    snap = metrics.snapshot()
+    json.dumps(snap)  # stampable into bench artifacts
+    counters = {(c["name"], tuple(sorted(c["labels"].items()))): c["value"]
+                for c in snap["counters"]}
+    assert counters[("decisions", (("fabric", "F1"),
+                                   ("outcome", "applied")))] == 3.0
+    assert counters[("decisions", (("fabric", "F1"),
+                                   ("outcome", "3")))] == 1.0
+    [g] = snap["gauges"]
+    assert g["value"] == 0.7
+    [h] = snap["histograms"]
+    assert h["count"] == 2  # non-finite samples are excluded
+    assert h["sum"] == pytest.approx(1.2)
+    assert (h["min"], h["max"]) == (0.5, 0.7)
+    assert len(h["counts"]) == len(h["edges"]) + 1  # + overflow slot
+    assert sum(h["counts"]) == 2
+
+
+def test_histogram_quantile_bucket_resolution():
+    metrics.enable()
+    vals = np.linspace(0.1, 10.0, 1001)
+    metrics.observe_many("h", vals)
+    [h] = metrics.snapshot()["histograms"]
+    # extremes are exact (clamped to recorded min/max), the middle is
+    # bucket-resolution accurate (12 buckets/decade => <= ~10% relative)
+    assert metrics.histogram_quantile(h, 0.0) == pytest.approx(0.1)
+    assert metrics.histogram_quantile(h, 1.0) == pytest.approx(10.0)
+    med = metrics.histogram_quantile(h, 0.5)
+    assert med == pytest.approx(float(np.median(vals)), rel=0.10)
+    assert np.isnan(metrics.histogram_quantile(
+        {"counts": [0, 0], "edges": [1.0], "min": None, "max": None}, 0.5))
+
+
+def test_histogram_frac_above_is_conservative():
+    metrics.enable()
+    metrics.observe_many("h", [0.5, 0.5, 1.5, 2.5])
+    [h] = metrics.snapshot()["histograms"]
+    # 1.0 is a bucket edge: samples <= 1.0 are excluded exactly
+    assert metrics.histogram_frac_above(h, 1.0) == pytest.approx(0.5)
+    # threshold inside a bucket: the straddling bucket counts fully above,
+    # so burn is never under-reported
+    assert metrics.histogram_frac_above(h, 0.55) >= 0.5
+    assert metrics.histogram_frac_above(h, 100.0) == 0.0
+
+
+def test_merge_snapshots_sums_counts():
+    metrics.enable()
+    metrics.inc("c", 1.0, fabric="F1")
+    metrics.set_gauge("g", 1.0)
+    metrics.observe_many("h", [0.5], fabric="F1")
+    a = metrics.snapshot()
+    metrics.clear()
+    metrics.inc("c", 2.0, fabric="F1")
+    metrics.inc("c", 5.0, fabric="F2")
+    metrics.set_gauge("g", 9.0)
+    metrics.observe_many("h", [1.5, 2.5], fabric="F1")
+    b = metrics.snapshot()
+    m = metrics.merge_snapshots([a, b])
+    counters = {(c["name"], c["labels"].get("fabric")): c["value"]
+                for c in m["counters"]}
+    assert counters[("c", "F1")] == 3.0 and counters[("c", "F2")] == 5.0
+    [g] = m["gauges"]
+    assert g["value"] == 9.0  # gauges are last-writer-wins
+    [h] = m["histograms"]
+    assert h["count"] == 3 and h["sum"] == pytest.approx(4.5)
+    assert (h["min"], h["max"]) == (0.5, 2.5)
+    bad = json.loads(json.dumps(b))
+    bad["histograms"][0]["edges"] = [1.0, 2.0]
+    with pytest.raises(ValueError, match="bucket edges differ"):
+        metrics.merge_snapshots([a, bad])
+
+
+def test_prometheus_text_exposition():
+    metrics.enable()
+    metrics.inc("reconfigure.decisions", 3.0, fabric="F1", outcome="vetoed")
+    metrics.set_gauge("worst", 0.5)
+    metrics.observe_many("mlu", [0.5, 1.5], fabric="F1")
+    text = metrics.prometheus_text()
+    assert ('repro_reconfigure_decisions_total'
+            '{fabric="F1",outcome="vetoed"} 3' in text)
+    assert "# TYPE repro_worst gauge" in text
+    assert "# TYPE repro_mlu histogram" in text
+    assert 'repro_mlu_bucket{fabric="F1",le="+Inf"} 2' in text
+    assert 'repro_mlu_count{fabric="F1"} 2' in text
+
+
+# ---- prediction quality ------------------------------------------------------
+
+def test_epoch_quality_coverage_vs_hit():
+    tms = np.array([[2.0, 0.0], [0.0, 2.0]])  # envelope = [2, 2]
+    block = np.array([
+        [1.0, 0.0],  # covered AND hit (tm_0 alone dominates)
+        [1.5, 1.5],  # covered, NOT hit (lives between the critical TMs)
+        [3.0, 0.0],  # uncovered (beyond the envelope)
+    ])
+    q = quality.epoch_quality(tms, block)
+    np.testing.assert_array_equal(q["covered"], [True, True, False])
+    np.testing.assert_array_equal(q["hit"], [True, False, False])
+    assert q["coverage_excess"][2] == pytest.approx(1.5)
+    assert (q["overprovision"] >= 1.0).all() or q["overprovision"][2] < 1.0
+    metrics.enable()
+    quality.record_epoch_quality("F1", tms, block)
+    sq = quality.snapshot_quality(metrics.snapshot(), "F1")
+    assert sq["n_intervals"] == 3
+    assert sq["coverage_ratio"] == pytest.approx(2 / 3)
+    assert sq["hit_rate"] == pytest.approx(1 / 3)
+    # fleet-wide aggregation sums the per-fabric counters
+    quality.record_epoch_quality("F2", tms, block[:1])
+    fleet = quality.snapshot_quality(metrics.snapshot())
+    assert fleet["n_intervals"] == 4
+    assert fleet["coverage_ratio"] == pytest.approx(3 / 4)
+
+
+# ---- decision audit ----------------------------------------------------------
+
+def test_audit_roundtrip_and_replay(tmp_path):
+    audit.enable()
+    assert should_reconfigure(1.0, 0.4, 0.2, fabric="F9") is True
+    assert should_reconfigure(-0.1, 0.4, fabric="F9") is False
+    assert should_reconfigure(1.0, 0.4, 0.2, contingency_weight=0.5,
+                              benefit_worst=-2.0, disruption_worst=0.4,
+                              fabric="F9") is False
+    per = {"a": {"p999_mlu": 1.0, "p999_alu": 0.5},
+           "b": {"p999_mlu": 0.9, "p999_alu": 0.8}}
+    chosen = pick_best(per, 0.05, fabric="F9")
+    path = tmp_path / "audit.jsonl"
+    audit.export_jsonl(path)
+    recs = audit.read_jsonl(path)
+    assert recs == json.loads(json.dumps(audit.records()))
+    assert [r["seq"] for r in recs] == list(range(len(recs)))
+    kinds = [r["kind"] for r in recs]
+    assert kinds.count("should_reconfigure") == 3
+    assert kinds.count("pick_best") == 1
+    # records carry the PRE-blend inputs + blend terms: replayable as-is
+    assert audit.verify(recs) == []
+    blended = next(r for r in recs if r.get("contingency_weight"))
+    assert blended["benefit"] == 1.0 and blended["benefit_worst"] == -2.0
+    pb = next(r for r in recs if r["kind"] == "pick_best")
+    assert pb["chosen"] == chosen
+    assert pb["runner_up"] in per and pb["runner_up"] != chosen
+    # a tampered outcome must be caught
+    recs[0]["decision"] = not recs[0]["decision"]
+    problems = audit.verify(recs)
+    assert problems and "seq 0" in problems[0]
+
+
+def test_replay_does_not_pollute_audit_or_metrics():
+    audit.enable()
+    metrics.enable()
+    should_reconfigure(1.0, 0.4, fabric="F9")
+    recs = audit.records()
+    snap_before = metrics.snapshot()
+    assert audit.verify(recs) == []
+    # replaying re-executes the decision functions with recording suspended:
+    # no fresh audit entries, no counter bumps, both layers still enabled
+    assert audit.records() == recs
+    assert metrics.snapshot() == snap_before
+    assert audit.enabled() and metrics.enabled()
+
+
+# ---- enabled-parity on all three engines (bit-identical) ---------------------
+
+def _assert_bit_identical(on, off):
+    for k in P999:
+        assert on.summary[k] == off.summary[k], k
+    np.testing.assert_array_equal(on.metrics.mlu, off.metrics.mlu)
+    np.testing.assert_array_equal(on.metrics.alu, off.metrics.alu)
+    np.testing.assert_array_equal(on.metrics.olr, off.metrics.olr)
+    np.testing.assert_array_equal(on.metrics.stretch, off.metrics.stretch)
+    assert on.n_routing_updates == off.n_routing_updates
+    assert on.n_topology_updates == off.n_topology_updates
+
+
+@pytest.mark.parametrize("engine,backend", [("sequential", "scipy"),
+                                            ("batched", "pdhg")])
+def test_metrics_audit_parity_bit_identical(tiny_fabric, tiny_trace, engine,
+                                            backend):
+    off = _run(tiny_fabric, tiny_trace, engine=engine, solver_backend=backend)
+    metrics.enable()
+    audit.enable()
+    on = _run(tiny_fabric, tiny_trace, engine=engine, solver_backend=backend)
+    snap = metrics.snapshot()
+    _assert_bit_identical(on, off)
+    hists = {(h["name"], h["labels"].get("fabric")): h
+             for h in snap["histograms"]}
+    # every scored interval landed in the per-fabric fleet histograms
+    assert hists[("interval.mlu", FAB)]["count"] == on.metrics.mlu.shape[0]
+    assert hists[("interval.stretch", FAB)]["count"] == \
+        on.metrics.stretch.shape[0]
+    updates = sum(c["value"] for c in snap["counters"]
+                  if c["name"] == "controller.topology_updates")
+    assert updates == on.n_topology_updates + on.n_skipped_topology
+    assert quality.snapshot_quality(snap, FAB)["n_intervals"] == \
+        on.metrics.mlu.shape[0]
+
+
+def test_fleet_engine_metrics_parity_bit_identical(tiny_fabric, tiny_trace):
+    job = FleetJob(tiny_fabric, tiny_trace,
+                   Strategy(nonuniform=False, hedging=True), CC, SC)
+    off = run_fleet([job])[0]
+    metrics.enable()
+    audit.enable()
+    on = run_fleet([job])[0]
+    _assert_bit_identical(on, off)
+    snap = metrics.snapshot()
+    hists = {(h["name"], h["labels"].get("fabric")): h
+             for h in snap["histograms"]}
+    assert hists[("interval.mlu", FAB)]["count"] == on.metrics.mlu.shape[0]
+
+
+# ---- transition gate: audit log vs transition_log (satellite) ----------------
+
+def test_transition_log_matches_audit_after_jsonl_round_trip(
+        tiny_fabric, gate_trace, tmp_path):
+    metrics.enable()
+    audit.enable()
+    res = run_controller(tiny_fabric, gate_trace,
+                         Strategy(nonuniform=True, hedging=True), GATE_CC, SC)
+    assert res.transition_log, "gate config must evaluate transitions"
+    path = tmp_path / "audit.jsonl"
+    audit.export_jsonl(path)
+    recs = [r for r in audit.read_jsonl(path)
+            if r["kind"] == "should_reconfigure"]
+    # one gate evaluation per logged transition, in walk order, agreeing on
+    # inputs and outcome — and each record re-derives its decision
+    assert len(recs) == len(res.transition_log)
+    for rec, entry in zip(recs, res.transition_log):
+        assert rec["fabric"] == FAB
+        assert rec["decision"] == entry["applied"]
+        assert rec["benefit"] == pytest.approx(entry["benefit"])
+        assert rec["disruption"] == pytest.approx(entry["disruption"])
+    assert audit.verify(recs) == []
+    # the reconfigure.decisions counters tell the same story
+    gate = [c for c in metrics.snapshot()["counters"]
+            if c["name"] == "reconfigure.decisions"]
+    assert sum(c["value"] for c in gate) == len(recs)
+    vetoed = sum(c["value"] for c in gate
+                 if c["labels"]["outcome"] == "vetoed")
+    assert vetoed == sum(not e["applied"] for e in res.transition_log)
+
+
+def test_decision_instant_event_schema(tiny_fabric, gate_trace):
+    obs.enable()
+    res = run_controller(tiny_fabric, gate_trace,
+                         Strategy(nonuniform=True, hedging=True), GATE_CC, SC)
+    evs = [r for r in obs.events() if r["ph"] == "i"
+           and r["name"].startswith("controller.topology_")]
+    applied = [r for r in evs if r["name"] == "controller.topology_applied"]
+    skipped = [r for r in evs if r["name"] == "controller.topology_skipped"]
+    assert len(applied) == res.n_topology_updates
+    assert len(skipped) == res.n_skipped_topology
+    for r in evs:
+        assert r["args"]["fabric"] == FAB
+        assert isinstance(r["args"]["start"], int)
+        assert 0 <= r["args"]["start"] < gate_trace.n_intervals
+
+
+# ---- disabled-path overhead --------------------------------------------------
+
+def test_disabled_metrics_audit_overhead(tiny_fabric, tiny_trace):
+    t0 = time.perf_counter()
+    _run(tiny_fabric, tiny_trace, engine="sequential", solver_backend="scipy")
+    wall = time.perf_counter() - t0
+    # instrumentation sites fire a handful of times per interval; bound the
+    # disabled cost of 100 calls/interval — far more than the engines make
+    n_calls = 100 * tiny_trace.n_intervals
+    reps = 20000
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        metrics.inc("c", fabric="F1", outcome="applied")
+        metrics.observe_many("h", (0.5, 0.7), fabric="F1")
+        audit.record("should_reconfigure", benefit=1.0, disruption=0.5)
+    per_call = (time.perf_counter() - t0) / (3 * reps)
+    assert per_call * n_calls < 0.02 * wall, (
+        f"disabled metrics+audit would cost {per_call * n_calls:.4f}s of a "
+        f"{wall:.2f}s run ({per_call * 1e9:.0f}ns per disabled call)")
+
+
+# ---- fleet health report -----------------------------------------------------
+
+def _engine_snapshot(fabric, trace):
+    metrics.enable()
+    audit.enable()
+    res = run_controller(fabric, trace,
+                         Strategy(nonuniform=True, hedging=True), GATE_CC, SC)
+    snap = metrics.snapshot()
+    recs = audit.records()
+    metrics.disable()
+    audit.disable()
+    return res, snap, recs
+
+
+def test_health_report_from_engine_run(tiny_fabric, gate_trace):
+    res, snap, recs = _engine_snapshot(tiny_fabric, gate_trace)
+    report = health_report(snap, recs, slos=[("mlu", 1.0), ("mlu", 0.0)])
+    [row] = report["fabrics"]
+    fleet = report["fleet"]
+    assert row["fabric"] == FAB and fleet["fabric"] == FLEET
+    assert row["n_intervals"] == res.metrics.mlu.shape[0]
+    assert fleet["n_intervals"] == row["n_intervals"]  # one-fabric fleet
+    d = row["decisions"]
+    assert d["applied"] == res.n_topology_updates
+    assert d["skipped"] == res.n_skipped_topology
+    assert d["vetoed"] == sum(not e["applied"] for e in res.transition_log)
+    if d["vetoed"]:
+        assert d["top_veto_reason"]
+    assert row["mlu"]["p50"] <= row["mlu"]["p99"] <= row["mlu"]["p999"]
+    # every interval exceeds an SLO target of 0, none can be asserted for 1.0
+    assert row["slo_burn"]["mlu>0"] == pytest.approx(1.0)
+    assert 0.0 <= row["predictor"]["coverage_ratio"] <= 1.0
+
+
+def test_health_cli_end_to_end(tiny_fabric, gate_trace, tmp_path, capsys):
+    _, snap, recs = _engine_snapshot(tiny_fabric, gate_trace)
+    art = tmp_path / "BENCH_x.json"  # bench-artifact style input
+    art.write_text(json.dumps({"rows": [], "_metrics": snap, "_audit": recs}))
+    plain = tmp_path / "snap.json"  # plain-snapshot style input
+    metrics.export_json(plain, snap)
+    aud = tmp_path / "audit.jsonl"
+    audit.export_jsonl(aud)
+
+    assert health_main([str(art), "--slo", "mlu=1.0",
+                        "--verify-audit"]) == 0
+    out = capsys.readouterr().out
+    assert FAB in out and FLEET in out and "burn(mlu>1)" in out
+
+    # plain snapshot + --audit JSONL: same table, doubled counts via merge
+    assert health_main([str(art), str(plain), "--audit", str(aud)]) == 0
+    merged_snap, merged_recs = load_inputs([str(art), str(plain)],
+                                           [str(aud)])
+    assert len(merged_recs) == 2 * len(recs) if recs else True
+    capsys.readouterr()
+
+    assert health_main([str(art), "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["fleet"]["fabric"] == FLEET
+    assert [r["fabric"] for r in payload["fabrics"]] == [FAB]
+
+    # --verify-audit must fail on a tampered artifact
+    if recs and any(r["kind"] == "should_reconfigure" for r in recs):
+        bad = json.loads(art.read_text())
+        for r in bad["_audit"]:
+            if r["kind"] == "should_reconfigure":
+                r["decision"] = not r["decision"]
+                break
+        art.write_text(json.dumps(bad))
+        assert health_main([str(art), "--verify-audit"]) == 1
+        assert "AUDIT MISMATCH" in capsys.readouterr().out
+
+
+def test_health_cli_rejects_non_snapshot_input(tmp_path):
+    bogus = tmp_path / "x.json"
+    bogus.write_text(json.dumps({"rows": []}))
+    with pytest.raises(ValueError, match="neither a metrics snapshot"):
+        load_inputs([str(bogus)])
+
+
+# ---- ring-buffer dropped-event accounting (satellite) ------------------------
+
+def test_dropped_counter_meta_record_and_report_warning(tmp_path, capsys):
+    obs.enable(capacity=8)
+    for i in range(20):
+        with obs.span(f"s{i}"):
+            pass
+    assert obs.dropped() == 12
+    path = tmp_path / "t.jsonl"
+    obs.export_jsonl(path)
+    recs = obs.read_jsonl(path)
+    meta = [r for r in recs if r["ph"] == "M"]
+    assert len(meta) == 1 and meta[0]["name"] == "trace.dropped"
+    assert meta[0]["args"]["count"] == 12
+    # meta records stay out of the Chrome viewer document
+    assert all(ev["ph"] != "M" for ev in obs.chrome_trace_events(recs))
+    # and the report CLI surfaces the loss
+    assert report_main([str(path), "--json"]) == 0
+    captured = capsys.readouterr()
+    assert json.loads(captured.out)["n_dropped"] == 12
+    assert "12 events were dropped" in captured.err
+    obs.clear()
+    assert obs.dropped() == 0
+    obs.enable(capacity=65536)  # restore the default for later tests
