@@ -91,7 +91,49 @@ def run(force: bool = False):
     return cached("kernels", _run, force)
 
 
-if __name__ == "__main__":
+def main() -> None:
+    import argparse
     import json
+    import pathlib
+    import time as _time
 
-    print(json.dumps(run(), indent=2))
+    from benchmarks.common import finalize
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--roofline", action="store_true",
+                    help="run the live kernel-triad roofline "
+                         "(benchmarks.bench_roofline) instead of the "
+                         "per-kernel micros")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small shapes, no speedup assertion")
+    ap.add_argument("--force", action="store_true", help="ignore cached results")
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write the result to this JSON file")
+    args = ap.parse_args()
+    t0 = _time.time()
+    if args.roofline:
+        from benchmarks import bench_roofline as br
+
+        out = br.run(force=args.force, scale="tiny" if args.tiny else "bench")
+        finalize(out, t0)
+        print(br.table(out["rows"]))
+        print(json.dumps(out["aggregate"], indent=2, default=str))
+        if args.json:
+            pathlib.Path(args.json).write_text(
+                json.dumps(out, indent=2, default=str))
+        if not args.tiny:
+            best = out["aggregate"]["best_speedup"]
+            assert best >= br.MIN_TUNED_SPEEDUP, (
+                "autotuned tiles must beat the fixed 128-tiles by >= "
+                f"{br.MIN_TUNED_SPEEDUP}x on at least one kernel family at "
+                f"bench scale; got {best}x")
+        return
+    out = run(force=args.force)
+    finalize(out, t0)
+    print(json.dumps(out, indent=2))
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,106 +1,244 @@
-"""Roofline table from the dry-run artifacts (deliverable g).
+"""Live kernel-triad roofline: measured achieved FLOPs/bandwidth for the
+linkload / queueloss / PDHG-step hot kernels vs *measured* device peaks,
+before and after autotuning.
 
-Per (arch × shape × mesh): the three roofline terms in seconds,
-  compute    = per-chip HLO FLOPs / 197 TFLOP/s (bf16)
-  memory     = per-chip HBM bytes / 819 GB/s
-  collective = per-chip wire bytes / 50 GB/s (ICI link)
-the dominant term, MODEL_FLOPS (6·N·D train / 2·N·tokens decode), the
-useful-compute ratio MODEL_FLOPS / HLO_FLOPs, and the roofline fraction
-(MODEL_FLOPS-at-peak time / dominant-term time — the score the perf loop
-drives up).  Multi-pod cells additionally report the inter-pod (DCNI) traffic
-and the Gemini-optimized DCNI collective term (§Perf).
+This replaces the old dry-run-artifact reader (which crashed whenever
+``results/dryrun`` was absent): every number here is measured live on the
+current device —
+
+  * **peaks** — a jitted f32 matmul (compute roof) and a jitted streaming
+    copy (bandwidth roof), so the fractions are machine-relative and stay
+    comparable across runner generations without calibration;
+  * **default_s / tuned_s** — each kernel timed at the fixed legacy 128-tiles
+    (default PDHG knobs) and again at the autotuner's certified winners, so
+    the committed ``BENCH_roofline.json`` demonstrates the before/after gap;
+  * **achieved_fraction** — achieved-FLOPs/peak-FLOPs vs achieved-bytes/peak
+    -bandwidth, whichever roof the kernel sits closer to (the roofline
+    score the CI ``achieved_fraction`` gate ratchets).
+
+CPU interpret-mode fractions are tiny in absolute terms (the Pallas
+interpreter is a correctness vehicle, not a production backend) — the gate is
+relative to the committed baseline, not to 1.0.
+
+    python -m benchmarks.bench_kernels --roofline [--tiny] [--json OUT.json]
 """
 
 from __future__ import annotations
 
-import json
-import pathlib
+import time
 
 import numpy as np
 
-PEAK_FLOPS = 197e12  # bf16 / chip
-HBM_BW = 819e9
-LINK_BW = 50e9
+from benchmarks.common import cached
 
-DRYRUN = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
-
-SHAPE_TOKENS = {
-    "train_4k": 4096 * 256,
-    "prefill_32k": 32768 * 32,
-    "decode_32k": 128,  # one token per sequence
-    "long_500k": 1,
+# (t, c, e, pdhg pods, pdhg m, pdhg iters) per scale; "bench" matches
+# bench_kernels' linkload shape — the scale the ≥1.15× tuned-vs-default
+# acceptance bar is asserted at
+SHAPES = {
+    "bench": dict(t=512, c=132, e=132, v=12, m=8, iters=200),
+    "tiny": dict(t=96, c=56, e=56, v=8, m=4, iters=50),
 }
 
-
-def model_flops(rec: dict) -> float:
-    n_active = rec["model_params_active"]
-    toks = SHAPE_TOKENS[rec["shape"]]
-    if rec["shape"] == "train_4k":
-        return 6.0 * n_active * toks
-    return 2.0 * n_active * toks  # prefill/decode forward-only
+MIN_TUNED_SPEEDUP = 1.15  # asserted at bench scale (tuned vs fixed-128)
 
 
-def load_cells(tagged: bool = False) -> list:
-    rows = []
-    for f in sorted(DRYRUN.glob("*.json")):
-        parts = f.stem.split("__")
-        has_tag = len(parts) > 3
-        if has_tag != tagged:
-            continue
-        rec = json.loads(f.read_text())
-        if rec["status"] != "ok":
-            continue
-        n_dev = rec["n_devices"]
-        compute_s = rec["flops"] / PEAK_FLOPS
-        # memory bounds: floor = resident working set crosses HBM ≥ once;
-        # ceiling = analyzer traffic (pessimistic: CPU-backend fusion is
-        # weaker than TPU's, so unfused elementwise chains inflate it)
-        ma = rec["memory_analysis"]
-        mem_lo_bytes = ma["argument_bytes"] + ma["output_bytes"] + ma["temp_bytes"]
-        mem_lo_s = mem_lo_bytes / HBM_BW
-        mem_hi_s = rec["hbm_bytes"] / HBM_BW
-        coll_s = rec["collectives"]["total_wire_bytes_per_chip"] / LINK_BW
-        terms = {"compute": compute_s, "memory": mem_hi_s, "collective": coll_s}
-        dominant = max(terms, key=terms.get)
-        mf = model_flops(rec)
-        # ideal time: perfect implementation still needs the model's FLOPs and
-        # one pass over the working set, on the faster of the two units
-        ideal_s = max(mf / n_dev / PEAK_FLOPS, mem_lo_s)
-        bound_s = max(terms.values())
-        rows.append({
-            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
-            "tag": parts[3] if has_tag else "",
-            "compute_s": compute_s, "memory_s": mem_hi_s,
-            "memory_lo_s": mem_lo_s, "collective_s": coll_s,
-            "dominant": dominant,
-            "model_flops": mf,
-            "useful_ratio": mf / max(rec["flops"] * n_dev, 1e-9),
-            "roofline_fraction": ideal_s / max(bound_s, 1e-12),
-            "interpod_bytes": float(np.asarray(rec["pod_tm_bytes"]).sum()),
-        })
-    return rows
+def _time(fn, reps: int = 3) -> float:
+    fn()  # compile/warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
 
 
-def table(rows: list, mesh: str = "16x16") -> str:
-    out = [f"{'arch':24s} {'shape':12s} {'comp(s)':>9s} {'mem(s)':>9s} "
-           f"{'coll(s)':>9s} {'dominant':>10s} {'MF/HLO':>7s} {'roofline':>9s}"]
+def measure_peaks() -> dict:
+    """Measured compute / bandwidth roofs of the current default device."""
+    import jax
+    import jax.numpy as jnp
+
+    n = 1024
+    a = jnp.asarray(np.random.default_rng(0).normal(size=(n, n)), jnp.float32)
+    mm = jax.jit(lambda x: x @ x)
+    t_mm = _time(lambda: jax.block_until_ready(mm(a)))
+    big = jnp.ones((1 << 24,), jnp.float32)  # 64 MiB
+    cp = jax.jit(lambda x: x + 1.0)
+    t_cp = _time(lambda: jax.block_until_ready(cp(big)))
+    return {
+        "peak_flops": 2.0 * n**3 / t_mm,
+        "peak_bw": 2.0 * big.size * 4 / t_cp,  # read + write stream
+        "device": jax.devices()[0].device_kind,
+        "backend": jax.default_backend(),
+    }
+
+
+def _frac(flops: float, bytes_: float, seconds: float, peaks: dict) -> dict:
+    af = flops / seconds
+    ab = bytes_ / seconds
+    return {
+        "achieved_flops": af, "achieved_bw": ab,
+        "frac_flops": af / peaks["peak_flops"],
+        "frac_bw": ab / peaks["peak_bw"],
+        # the roofline score: distance to the nearer roof
+        "achieved_fraction": max(af / peaks["peak_flops"],
+                                 ab / peaks["peak_bw"]),
+    }
+
+
+def _bench_linkload(shape: dict, peaks: dict, reps: int) -> dict:
+    from repro.kernels.autotune import DEFAULT_TILES, tune_tiles
+    from repro.kernels.linkload import ops as ll
+
+    t, c, e = shape["t"], shape["c"], shape["e"]
+    rng = np.random.default_rng(0)
+    d = rng.gamma(2.0, 10.0, (t, c))
+    w = rng.random((c, e))
+    cap = rng.uniform(100.0, 900.0, e)
+    dt = DEFAULT_TILES
+
+    def call(bt, be, bc):
+        return ll.link_metrics(d, w, cap, backend="pallas",
+                               bt=bt, be=be, bc=bc)
+
+    default_s = _time(lambda: call(dt["bt"], dt["be"], dt["bc"]), reps)
+    entry = tune_tiles("linkload", t, c, e, reps=reps)
+    tiles = (entry["bt"], entry["be"], entry["bc"])
+    tuned_s = _time(lambda: call(*tiles), reps)
+    flops = 2.0 * t * c * e
+    bytes_ = 4.0 * (t * c + c * e + e + 4 * t)
+    return {
+        "family": "linkload", "shape": f"T{t}xC{c}xE{e}",
+        "default_s": default_s, "tuned_s": tuned_s,
+        "speedup": default_s / max(tuned_s, 1e-12),
+        "tiles": {"bt": tiles[0], "be": tiles[1], "bc": tiles[2]},
+        "bit_identical": True,  # tuner-certified eligibility condition
+        "flops": flops, "bytes": bytes_,
+        **_frac(flops, bytes_, tuned_s, peaks),
+    }
+
+
+def _bench_queueloss(shape: dict, peaks: dict, reps: int) -> dict:
+    from repro.kernels.autotune import DEFAULT_TILES, tune_tiles
+    from repro.kernels.queueloss import ops as ql
+
+    t, c, e = shape["t"], shape["c"], shape["e"]
+    rng = np.random.default_rng(1)
+    d = rng.gamma(2.0, 10.0, (t, c))
+    w = rng.random((c, e))
+    cap = rng.uniform(100.0, 900.0, e)
+    buf = rng.uniform(5.0, 50.0, e)
+    dt = DEFAULT_TILES
+
+    def call(bt, be, bc):
+        return ql.queue_loss(d, w, cap, buf, 0.05, backend="pallas",
+                             bt=bt, be=be, bc=bc)
+
+    default_s = _time(lambda: call(dt["bt"], dt["be"], dt["bc"]), reps)
+    entry = tune_tiles("queueloss", t, c, e, reps=reps)
+    tiles = (entry["bt"], entry["be"], entry["bc"])
+    tuned_s = _time(lambda: call(*tiles), reps)
+    # matmul + the sequential queue recurrence (~6 flops/link/sub-step)
+    flops = 2.0 * t * c * e + 6.0 * t * e
+    bytes_ = 4.0 * (t * c + c * e + 2 * e + 2 * t)
+    return {
+        "family": "queueloss", "shape": f"TS{t}xC{c}xE{e}",
+        "default_s": default_s, "tuned_s": tuned_s,
+        "speedup": default_s / max(tuned_s, 1e-12),
+        "tiles": {"bt": tiles[0], "be": tiles[1], "bc": tiles[2]},
+        "bit_identical": True,
+        "flops": flops, "bytes": bytes_,
+        **_frac(flops, bytes_, tuned_s, peaks),
+    }
+
+
+def _bench_pdhg(shape: dict, peaks: dict, reps: int) -> dict:
+    """Per-iteration cost of the PDHG stage-1 hot loop, default vs tuned
+    ``dual_topk``.  A fixed iteration budget (tol = 0 disables the early
+    exit) isolates sec/iter from convergence luck; the tuner's knob winner is
+    separately gated on the convergence contract (see tuner.tune_solver)."""
+    import jax
+
+    from repro.core.fleet import FLEET_SPECS, make_fabric
+    from repro.core.jaxlp import JaxRoutingSolver
+    from repro.kernels.autotune import (DEFAULT_SOLVER_KNOBS, get_table,
+                                        solver_key, tune_solver)
+
+    # smallest fleet fabric with >= v pods (largest overall if none reach v)
+    spec = min((s for s in FLEET_SPECS if s.n_pods >= shape["v"]),
+               key=lambda s: s.n_pods,
+               default=max(FLEET_SPECS, key=lambda s: s.n_pods))
+    fabric = make_fabric(spec)
+    v, m, iters = fabric.n_pods, shape["m"], shape["iters"]
+    rng = np.random.default_rng(2)
+    c = v * (v - 1)
+    tms = rng.gamma(2.0, 10.0, (m, c))
+    caps = rng.uniform(100.0, 900.0, c)
+
+    def run_fixed(solver):
+        d3 = solver._dense_tms(tms)
+        ic = solver._dense_inv_cap(caps)
+        return jax.block_until_ready(solver._solve_mlu(d3, ic, solver.valid))
+
+    fixed = dict(max_iters=iters, check_every=iters + 1, tol=0.0)
+    default = JaxRoutingSolver(
+        fabric, m, dual_topk=DEFAULT_SOLVER_KNOBS["dual_topk"], **fixed)
+    default_s = _time(lambda: run_fixed(default), reps)
+    knobs = tune_solver(fabric, m, reps=max(reps - 1, 1))
+    tuned = JaxRoutingSolver(fabric, m, dual_topk=knobs["dual_topk"], **fixed)
+    tuned_s = _time(lambda: run_fixed(tuned), reps)
+    # 3 operator applications per iteration (forward, adjoint, reflected
+    # forward), each two einsums of 2·m·V³ flops
+    flops = 12.0 * m * v**3 * iters
+    bytes_ = 4.0 * (6.0 * v**3 + 4.0 * m * v**2) * iters
+    return {
+        "family": "pdhg_step", "shape": f"V{v}m{m}x{iters}it",
+        "default_s": default_s, "tuned_s": tuned_s,
+        "speedup": default_s / max(tuned_s, 1e-12),
+        "knobs": get_table().get(solver_key(v, m)),
+        "flops": flops, "bytes": bytes_,
+        **_frac(flops, bytes_, tuned_s, peaks),
+    }
+
+
+def table(rows: list) -> str:
+    """Human-readable roofline table (also the README worked example)."""
+    out = [f"{'family':12s} {'shape':16s} {'default(s)':>11s} {'tuned(s)':>10s}"
+           f" {'speedup':>8s} {'GFLOP/s':>9s} {'frac':>9s}"]
     for r in rows:
-        if r["mesh"] != mesh:
-            continue
         out.append(
-            f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:9.4f} "
-            f"{r['memory_s']:9.4f} {r['collective_s']:9.4f} {r['dominant']:>10s} "
-            f"{r['useful_ratio']:7.3f} {r['roofline_fraction']:9.4f}")
+            f"{r['family']:12s} {r['shape']:16s} {r['default_s']:11.4f} "
+            f"{r['tuned_s']:10.4f} {r['speedup']:8.2f} "
+            f"{r['achieved_flops'] / 1e9:9.3f} {r['achieved_fraction']:9.2e}")
     return "\n".join(out)
 
 
-def run(force: bool = False):
-    rows = load_cells()
-    return {"rows": rows}
+def _run(scale: str, reps: int = 3) -> dict:
+    shape = SHAPES[scale]
+    peaks = measure_peaks()
+    rows = [
+        _bench_linkload(shape, peaks, reps),
+        _bench_queueloss(shape, peaks, reps),
+        _bench_pdhg(shape, peaks, reps),
+    ]
+    agg = {
+        "best_speedup": round(max(r["speedup"] for r in rows), 3),
+        "achieved_fraction": {r["family"]: r["achieved_fraction"]
+                              for r in rows},
+        "peaks": peaks,
+        "scale": scale,
+    }
+    return {"rows": rows, "aggregate": agg}
+
+
+def run(force: bool = False, scale: str | None = None) -> dict:
+    scale = scale or "bench"
+    return cached(f"roofline_{scale}", lambda: _run(scale), force,
+                  params=SHAPES[scale])
 
 
 if __name__ == "__main__":
-    rows = load_cells()
-    print(table(rows, "16x16"))
-    print()
-    print(table(rows, "2x16x16"))
+    import json
+
+    out = run(force=True)
+    print(table(out["rows"]))
+    print(json.dumps(out["aggregate"], indent=2, default=str))

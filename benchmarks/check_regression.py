@@ -22,6 +22,12 @@ Rules per metric kind:
     deltas): fail when ``fresh > baseline + tol``.
   * **higher** — quality metrics where smaller is worse (e.g. skip counts,
     feasibility fractions): fail when ``fresh < baseline − tol``.
+  * **achieved_fraction** — roofline ratchet (``BENCH_roofline.json``): the
+    achieved fraction of the *measured* device roof must stay ≥ ``min_ratio ×
+    baseline``.  No calibration scale applies: achieved and peak are measured
+    back-to-back on the same machine, so the fraction self-normalizes across
+    runner generations — a drop is a real kernel regression, not slower
+    hardware.
 
 Refresh baselines after an intentional perf change with ``--update`` (run the
 ``--tiny`` benches first), and verify the gate itself with ``--self-test``:
@@ -79,6 +85,22 @@ SPECS = {
                    ("aggregate.frac_gemini_feasible", 0.0),
                    ("aggregate.metrics.predictor_coverage", 0.05)],
     },
+    "BENCH_roofline.json": {
+        "time": ["_wall_s"],
+        "lower": [],
+        # the autotuner's tuned-vs-fixed-128 edge must never invert (tuned
+        # slower than default); the wide tol absorbs --tiny timing noise —
+        # the ≥1.15x claim itself is asserted at bench scale by the bench
+        "higher": [("aggregate.best_speedup", 0.4)],
+        # fraction of the measured device roof per kernel family; 0.5 keeps
+        # headroom for sub-ms timer noise at --tiny scale while still biting
+        # on a structural slowdown (e.g. a padding or tiling regression)
+        "achieved_fraction": [
+            ("aggregate.achieved_fraction.linkload", 0.5),
+            ("aggregate.achieved_fraction.queueloss", 0.5),
+            ("aggregate.achieved_fraction.pdhg_step", 0.5),
+        ],
+    },
     "BENCH_failures.json": {
         "time": ["_wall_s"],
         # survivability is quality: the hedged class's worst-contingency
@@ -129,6 +151,16 @@ def check(name: str, fresh: dict, base: dict,
                 failures.append(
                     f"{name}: {path} = {f:.2f}s exceeds budget {budget:.2f}s "
                     f"(baseline {b:.2f}s × cal {scale:.2f} × {max_slowdown})")
+    for path, min_ratio in spec.get("achieved_fraction", []):
+        try:
+            f, b = float(_get(fresh, path)), float(_get(base, path))
+        except KeyError:
+            failures.append(f"{name}: missing roofline metric {path}")
+            continue
+        if f < b * min_ratio:  # unscaled on purpose — see module docstring
+            failures.append(
+                f"{name}: {path} fell to {f:.3g} from baseline {b:.3g} "
+                f"(< {min_ratio}x of the committed roofline fraction)")
     for path, tol in spec["lower"]:
         try:
             f, b = float(_get(fresh, path)), float(_get(base, path))
@@ -180,6 +212,15 @@ def _self_test(baseline_dir: pathlib.Path, max_slowdown: float) -> int:
             node[leaf] = float(node[leaf]) * 2.0 + 2 * PHASE_ABS_FLOOR_S
             if not check(name, onephase, base, max_slowdown):
                 print(f"self-test FAIL: {name} accepts a 2x regression "
+                      f"isolated to {path}")
+                ok = False
+        for path, min_ratio in SPECS[name].get("achieved_fraction", []):
+            dropped = copy.deepcopy(base)
+            parent, leaf = path.rpartition(".")[::2]
+            node = _get(dropped, parent) if parent else dropped
+            node[leaf] = float(node[leaf]) * min_ratio * 0.5
+            if not check(name, dropped, base, max_slowdown):
+                print(f"self-test FAIL: {name} accepts a roofline collapse "
                       f"isolated to {path}")
                 ok = False
         bad = copy.deepcopy(base)

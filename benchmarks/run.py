@@ -7,6 +7,8 @@ kernels.  Prints ``name,us_per_call,derived`` CSV lines (scaffold contract).
 
 from __future__ import annotations
 
+import sys
+
 import numpy as np
 
 from benchmarks.common import SCALE, emit
@@ -140,38 +142,24 @@ def main() -> None:
     except FileNotFoundError:
         emit("ml_fabric_gemini_vs_baselines", 0.0, "needs multi-pod dryrun first")
 
-    # ---- roofline (from dry-run artifacts) ------------------------------------
-    from benchmarks import bench_roofline
+    # ---- roofline (live, default-vs-autotuned) --------------------------------
+    # The old section read pre-generated ``results/dryrun`` artifacts and
+    # crashed when they were absent; the roofline is now measured live
+    # (benchmarks.bench_roofline) and this section degrades to a warning if
+    # the measurement itself fails (e.g. no jax on an analysis-only box).
+    try:
+        from benchmarks import bench_roofline
 
-    rows = bench_roofline.load_cells()
-    if rows:
-        single = [r for r in rows if r["mesh"] == "16x16"]
-        worst = min(single, key=lambda r: r["roofline_fraction"])
-        best = max(single, key=lambda r: r["roofline_fraction"])
-        emit("roofline_cells", 0.0,
-             f"n={len(rows)};best={best['arch']}/{best['shape']}"
-             f"@{best['roofline_fraction']:.3f};"
-             f"worst={worst['arch']}/{worst['shape']}"
-             f"@{worst['roofline_fraction']:.3f}")
-        n_coll = sum(r["dominant"] == "collective" for r in single)
-        emit("roofline_dominant", 0.0,
-             f"collective_bound={n_coll}/{len(single)} single-pod cells")
-        # §Perf hillclimb variants (tagged cells)
-        tagged = bench_roofline.load_cells(tagged=True)
-        base_by = {(r["arch"], r["shape"], r["mesh"]): r for r in rows}
-        for hc in [("qwen3-14b", "train_4k", "16x16", "v_mb1"),
-                   ("mixtral-8x7b", "prefill_32k", "16x16", "v_sorted"),
-                   ("mamba2-130m", "prefill_32k", "16x16", "v_q512"),
-                   ("mixtral-8x7b", "train_4k", "2x16x16", "v_sorted")]:
-            arch, shape, mesh, tag = hc
-            var = next((r for r in tagged if (r["arch"], r["shape"], r["mesh"],
-                                              r["tag"]) == hc), None)
-            base = base_by.get((arch, shape, mesh))
-            if var and base:
-                b0 = max(base["compute_s"], base["memory_s"], base["collective_s"])
-                b1 = max(var["compute_s"], var["memory_s"], var["collective_s"])
-                emit(f"perf_{arch}_{shape}_{tag}", 0.0,
-                     f"bound {b0:.2f}s->{b1:.2f}s ({b0/max(b1,1e-9):.2f}x)")
+        ro = bench_roofline.run()
+        for r in ro["rows"]:
+            emit(f"roofline_{r['family']}", r["tuned_s"] * 1e6,
+                 f"shape={r['shape']};speedup={r['speedup']:.2f}x;"
+                 f"frac={r['achieved_fraction']:.2e}")
+        emit("roofline_best_speedup", 0.0,
+             f"{ro['aggregate']['best_speedup']}x tuned-vs-128 on "
+             f"{ro['aggregate']['peaks']['device']}")
+    except Exception as exc:  # noqa: BLE001 — report-only section
+        print(f"WARNING: skipping roofline section: {exc!r}", file=sys.stderr)
 
 
 if __name__ == "__main__":

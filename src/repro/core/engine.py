@@ -112,14 +112,15 @@ def plan_controller(trace: Trace, cc, nonuniform: bool) -> ControllerPlan:
 _SOLVER_CACHE: dict = {}
 
 
-def routing_solver_for(fabric: Fabric, m: int, max_iters: int, tol: float):
+def routing_solver_for(fabric: Fabric, m: int, max_iters: int, tol: float,
+                       precision: str = "f32"):
     """Shared :class:`JaxRoutingSolver` cache (jit traces are expensive)."""
     from repro.core.jaxlp import JaxRoutingSolver
 
-    key = (fabric.n_pods, m, max_iters, tol)
+    key = (fabric.n_pods, m, max_iters, tol, precision)
     if key not in _SOLVER_CACHE:
         _SOLVER_CACHE[key] = JaxRoutingSolver(
-            fabric, m, max_iters=max_iters, tol=tol)
+            fabric, m, max_iters=max_iters, tol=tol, precision=precision)
     sol = _SOLVER_CACHE[key]
     sol.fabric = fabric  # same-shape fabrics share the solver
     return sol
@@ -373,7 +374,8 @@ def execute_plan(fabric: Fabric, trace: Trace, strategy: Strategy,
     with phases("solve", "engine.solve") as t_solve:
         if cc.solver_backend == "pdhg":
             solver = routing_solver_for(fabric, cc.k_critical,
-                                        cc.pdhg_max_iters, cc.pdhg_tol)
+                                        cc.pdhg_max_iters, cc.pdhg_tol,
+                                        cc.solver_precision)
             out = solver.solve_routing_batch(
                 art.tms_padded(cc.k_critical), caps, hedging=fixed.hedging,
                 deltas=art.deltas, skip_stage3=sc.skip_stage3)

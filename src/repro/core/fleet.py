@@ -243,9 +243,10 @@ def fleet_bucket_key(fabric: Fabric, cc, sc, trace: Trace,
                      quantum: int = 4) -> tuple:
     """Bucket key for one controller sweep: everything that must agree for
     its routing solves and its fused scoring pass to share one batch —
-    padded pod count, critical-TM count, PDHG settings, scoring backend and
-    threshold, loss config, and trace cadence."""
+    padded pod count, critical-TM count, PDHG settings (incl. the solver
+    arithmetic precision), scoring backend and threshold, loss config, and
+    trace cadence."""
     return (pad_pods(fabric.n_pods, quantum), cc.k_critical,
             cc.pdhg_max_iters, cc.pdhg_tol, sc.skip_stage3,
-            cc.backend, cc.overload_threshold, cc.loss,
+            cc.solver_precision, cc.backend, cc.overload_threshold, cc.loss,
             float(trace.interval_minutes))

@@ -152,7 +152,10 @@ def _run_bucket(key, idxs, resolved, arts, results, mesh):
 
     vp, m, max_iters, tol, skip_stage3 = key[:5]
     cp = vp * (vp - 1)
-    solver = routing_solver_for(_bucket_fabric(vp), m, max_iters, tol)
+    # every job in the bucket shares the key, hence the precision
+    precision = resolved[idxs[0]][1].solver_precision
+    solver = routing_solver_for(_bucket_fabric(vp), m, max_iters, tol,
+                                precision)
     paths_p = build_paths(vp)
 
     # ---- phase 2: stack plan artifacts onto the flattened batch axis --------

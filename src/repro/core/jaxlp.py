@@ -167,16 +167,35 @@ class JaxRoutingSolver:
     check_every: int = 100
     tol: float = 5e-3
     restart_every: int = 150  # Halpern anchor-restart period
-    dual_topk: int = 128  # support cap for the dual simplex projection
+    # support cap for the dual simplex projection; None = consult the
+    # autotune table (repro.kernels.autotune) for this (pods, m) shape
+    dual_topk: int | None = None
     # fleet-path batch quantization: leading batch axes round up to these so
     # differently-sized run_fleet calls (predict sweeps vs test sweeps) reuse
     # one jit trace per stage instead of retracing the while_loop per shape.
     # Padding replays real elements, which converge with their originals —
     # compile time dwarfs the wasted iterations at any realistic scale.
-    fleet_batch_quantum: int = 16
+    # None = consult the autotune table.
+    fleet_batch_quantum: int | None = None
     fleet_anchor_quantum: int = 4
+    # "f32" (default) or "bf16": mixed-precision inner loop — the einsum
+    # matvecs of _util/_util_adj run with bf16 operands (f32 accumulation),
+    # while projections, step sizes, and every convergence-check quantity
+    # (the duality-gap certificate) stay f32.  Opt-in via
+    # ControllerConfig.solver_precision; parity is test-bounded.
+    precision: str = "f32"
 
     def __post_init__(self):
+        assert self.precision in ("f32", "bf16"), self.precision
+        self._mp = self.precision == "bf16"
+        if self.dual_topk is None or self.fleet_batch_quantum is None:
+            from repro.kernels.autotune import solver_knobs
+
+            knobs = solver_knobs(self.fabric.n_pods, self.m)
+            if self.dual_topk is None:
+                self.dual_topk = knobs["dual_topk"]
+            if self.fleet_batch_quantum is None:
+                self.fleet_batch_quantum = knobs["fleet_batch_quantum"]
         v = self.fabric.n_pods
         paths: PathSet = build_paths(v)
         self.paths = paths
@@ -235,29 +254,59 @@ class JaxRoutingSolver:
 
     # ---- linear operators on the pod tensor ---------------------------------
 
-    def _util(self, f3, d3, ic):
-        """U[t, a, b] = capacity-normalized load of edge (a, b) under TM t."""
+    def _util_f32(self, f3, d3, ic):
+        """U[t, a, b] = capacity-normalized load of edge (a, b) under TM t —
+        always in f32 (the certificate / reported-objective path)."""
         load1 = jnp.einsum("mij,ijk->mik", d3, f3)  # first hops (+ direct)
         load2 = jnp.einsum("mij,ijk->mkj", d3, f3 * self.mask_kj[None])
         return (load1 + load2) * ic[None]
 
-    def _util_adj(self, y, d3, ic):
-        """Adjoint: y (m, V, V) → gradient on f3 (V, V, V)."""
+    def _util_adj_f32(self, y, d3, ic):
+        """Adjoint: y (m, V, V) → gradient on f3 (V, V, V) — always f32."""
         yn = y * ic[None]
         g1 = jnp.einsum("mij,mik->ijk", d3, yn)
         g2 = jnp.einsum("mij,mkj->ijk", d3, yn) * self.mask_kj[None]
         return g1 + g2
 
+    def _util(self, f3, d3, ic):
+        """Hot-loop load operator: bf16 operands with f32 accumulation when
+        ``precision == "bf16"`` (first-order steps tolerate rounded
+        directions), the exact f32 path otherwise."""
+        if not self._mp:
+            return self._util_f32(f3, d3, ic)
+        bf = jnp.bfloat16
+        fk = (f3 * self.mask_kj[None]).astype(bf)
+        d3c, f3c = d3.astype(bf), f3.astype(bf)
+        load1 = jnp.einsum("mij,ijk->mik", d3c, f3c,
+                           preferred_element_type=jnp.float32)
+        load2 = jnp.einsum("mij,ijk->mkj", d3c, fk,
+                           preferred_element_type=jnp.float32)
+        return (load1 + load2) * ic[None]
+
+    def _util_adj(self, y, d3, ic):
+        """Hot-loop adjoint (see :meth:`_util` for the precision contract)."""
+        if not self._mp:
+            return self._util_adj_f32(y, d3, ic)
+        bf = jnp.bfloat16
+        ync = (y * ic[None]).astype(bf)
+        d3c = d3.astype(bf)
+        g1 = jnp.einsum("mij,mik->ijk", d3c, ync,
+                        preferred_element_type=jnp.float32)
+        g2 = jnp.einsum("mij,mkj->ijk", d3c, ync,
+                        preferred_element_type=jnp.float32) * self.mask_kj[None]
+        return g1 + g2
+
     def _opnorm(self, d3, ic, valid, iters: int = 30):
-        """Power iteration for ‖U‖ (as an operator on f3)."""
+        """Power iteration for ‖U‖ (as an operator on f3) — kept f32 even in
+        mixed-precision mode (the step sizes it sets gate convergence)."""
 
         def body(_, vv):
-            v2 = self._util_adj(self._util(vv, d3, ic), d3, ic)
+            v2 = self._util_adj_f32(self._util_f32(vv, d3, ic), d3, ic)
             return v2 / (jnp.linalg.norm(v2) + 1e-30)
 
         v0 = jnp.where(valid, 1.0, 0.0).astype(d3.dtype)
         vv = jax.lax.fori_loop(0, iters, body, v0 / jnp.linalg.norm(v0))
-        return jnp.linalg.norm(self._util(vv, d3, ic))
+        return jnp.linalg.norm(self._util_f32(vv, d3, ic))
 
     def _proj_f(self, f3, valid):
         return _michelot_rows(f3, valid, self.V)
@@ -335,8 +384,9 @@ class JaxRoutingSolver:
             def check(op):
                 # exact duality gap of the matrix game: primal = max util of
                 # f; dual lower bound = min_f' <y, U f'> (closed form).
-                obj = self._util(f, d3, ic).max()
-                lb = self._dual_min(self._util_adj(y, d3, ic), valid)
+                # Certificate quantities are always f32, even in bf16 mode.
+                obj = self._util_f32(f, d3, ic).max()
+                lb = self._dual_min(self._util_adj_f32(y, d3, ic), valid)
                 gap_ok = obj - lb <= self.tol * jnp.maximum(obj, 1e-6)
                 rel = (obj - lb) / jnp.maximum(obj, 1e-6)
                 return gap_ok, obj, rel
@@ -350,7 +400,7 @@ class JaxRoutingSolver:
         f, y, fa, ya, k, it, done, last, gap = jax.lax.while_loop(
             cond, body, (f0, y0, f0, y0, jnp.asarray(0.0, d3.dtype),
                          jnp.int32(0), jnp.asarray(False), big, big))
-        return f, self._util(f, d3, ic).max(), it, y, gap
+        return f, self._util_f32(f, d3, ic).max(), it, y, gap
 
     @functools.partial(jax.jit, static_argnums=0)
     def _solve_mlu(self, d3, ic, valid):
@@ -437,8 +487,8 @@ class JaxRoutingSolver:
                 # 10·tol relative threshold covers that regime.
                 last = op[0]
                 obj = risk_of(f).max()
-                u_chk = self._util(f, d3, ic).max()
-                coeff = (self._util_adj(y, d3, ic)
+                u_chk = self._util_f32(f, d3, ic).max()
+                coeff = (self._util_adj_f32(y, d3, ic)
                          + delta * (z[..., 0] * ic0 + z[..., 1] * ic1))
                 lb = self._dual_min(coeff, valid) - u_star * y.sum()
                 gap_ok = obj - lb <= self.tol * jnp.maximum(obj, 1e-9)
@@ -460,7 +510,8 @@ class JaxRoutingSolver:
         out = jax.lax.while_loop(cond, body, state)
         f, y, z = out[:3]
         it, gap = out[7], out[10]
-        return f, risk_of(f).max(), self._util(f, d3, ic).max(), y, z, it, gap
+        return (f, risk_of(f).max(), self._util_f32(f, d3, ic).max(),
+                y, z, it, gap)
 
     @functools.partial(jax.jit, static_argnums=0)
     def _solve_risk(self, d3, ic, valid, u_star, delta):
@@ -524,8 +575,8 @@ class JaxRoutingSolver:
                 # by construction; only the MLU budget needs checking.
                 last = op[0]
                 obj = (cost * f).sum()
-                u_chk = self._util(f, d3, ic).max()
-                coeff = cost + self._util_adj(y, d3, ic)
+                u_chk = self._util_f32(f, d3, ic).max()
+                coeff = cost + self._util_adj_f32(y, d3, ic)
                 lb = self._dual_min(coeff, valid) - u_star * y.sum()
                 gap_ok = obj - lb <= self.tol * jnp.maximum(jnp.abs(obj), 1e-9)
                 stall = jnp.abs(obj - last) <= 10.0 * self.tol * jnp.maximum(
@@ -716,7 +767,11 @@ class JaxRoutingSolver:
             if mesh is not None:
                 from repro.parallel.sharding import shard_leading
 
-                fns = {k: shard_leading(fn, mesh) for k, fn in fns.items()}
+                # repack=True: shard_leading deals the (quantized, not
+                # mesh-aligned) batch round-robin across devices and handles
+                # any remainder itself — no caller-side mesh padding
+                fns = {k: shard_leading(fn, mesh, repack=True)
+                       for k, fn in fns.items()}
             self._fleet_fns_cache[key] = {k: jax.jit(fn)
                                           for k, fn in fns.items()}
         return self._fleet_fns_cache[key]
@@ -731,21 +786,20 @@ class JaxRoutingSolver:
                                      + a.shape[1:])])
             for a in args)
 
-    def _batch_target(self, n: int, quantum: int, mesh) -> int:
-        target = -(-n // max(quantum, 1)) * max(quantum, 1)
-        if mesh is not None:
-            size = mesh.devices.size
-            target = -(-target // size) * size
-        return target
+    def _batch_target(self, n: int, quantum: int) -> int:
+        """Quantize a batch size for jit-shape stability.  Mesh-size rounding
+        is gone: the repack-aware ``shard_leading`` splits any remainder
+        across devices itself."""
+        return -(-n // max(quantum, 1)) * max(quantum, 1)
 
     def _fleet_run(self, mesh, stage: str, *args):
         """Run one batched stage, quantizing the batch size (shape-stable jit
-        traces across differently-sized fleet calls) and padding to the mesh's
-        shard count; padded rows are stripped on return."""
+        traces across differently-sized fleet calls); padded rows are
+        stripped on return."""
         fn = self._fleet_fns(mesh)[stage]
         n = args[0].shape[0]
         args = self._pad_leading(
-            args, self._batch_target(n, self.fleet_batch_quantum, mesh))
+            args, self._batch_target(n, self.fleet_batch_quantum))
         out = fn(*args)
         return tuple(o[:n] for o in out)
 
@@ -753,7 +807,7 @@ class JaxRoutingSolver:
         """Run a batched cold anchor solve at a quantized batch size."""
         n = args[0].shape[0]
         args = self._pad_leading(
-            args, self._batch_target(n, self.fleet_anchor_quantum, None))
+            args, self._batch_target(n, self.fleet_anchor_quantum))
         out = fn(*args)
         return tuple(o[:n] for o in out)
 

@@ -229,7 +229,8 @@ def resolve_weights(fabric, tms_blocks: np.ndarray, caps: np.ndarray,
     deltas_kb = np.ascontiguousarray(
         np.broadcast_to(np.asarray(deltas, np.float64), (k, b)).reshape(-1))
     solver = routing_solver_for(fabric, tms_blocks.shape[1],
-                                cc.pdhg_max_iters, cc.pdhg_tol)
+                                cc.pdhg_max_iters, cc.pdhg_tol,
+                                cc.solver_precision)
     out = solver.solve_routing_batch(
         tms_kb, caps_kb, hedging=bool((deltas_kb > 0).any()),
         deltas=deltas_kb, skip_stage3=True)

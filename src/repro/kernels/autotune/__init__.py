@@ -1,0 +1,22 @@
+"""Kernel autotuning: per-(backend, device, shape) tile/knob table + tuner.
+
+See :mod:`repro.kernels.autotune.table` for the lookup/cache layers and the
+correctness contract, :mod:`repro.kernels.autotune.tuner` for the search.
+"""
+
+from repro.kernels.autotune.table import (DEFAULT_SOLVER_KNOBS, DEFAULT_TILES,
+                                          TABLE_VERSION, TuneTable,
+                                          device_kind, enabled, get_table,
+                                          pad_to, reset_table, resolve_tiles,
+                                          shape_bucket, shrink_bt,
+                                          solver_key, solver_knobs, tile_key)
+from repro.kernels.autotune.tuner import (FAMILIES, tile_candidates,
+                                          tune_solver, tune_tiles)
+
+__all__ = [
+    "DEFAULT_SOLVER_KNOBS", "DEFAULT_TILES", "TABLE_VERSION", "TuneTable",
+    "device_kind", "enabled", "get_table", "pad_to", "reset_table",
+    "resolve_tiles", "shape_bucket", "shrink_bt", "solver_key",
+    "solver_knobs", "tile_key", "FAMILIES", "tile_candidates", "tune_solver",
+    "tune_tiles",
+]

@@ -1,0 +1,37 @@
+"""Re-tune the standard kernel shapes on this machine and persist winners.
+
+    PYTHONPATH=src python -m repro.kernels.autotune [--tiny]
+
+Writes the user cache (``~/.cache/repro-autotune`` or
+``REPRO_AUTOTUNE_CACHE``); subsequent processes pick the winners up
+automatically.  ``--tiny`` tunes the CI smoke shapes only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.kernels.autotune import FAMILIES, tune_tiles
+
+# (t, c, e) per scale: bench scale matches benchmarks/bench_kernels.py,
+# tiny matches the CI smoke sweeps
+SHAPES = {"bench": (512, 132, 132), "tiny": (96, 56, 56)}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="tune the CI smoke shapes only")
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    shapes = {"tiny": SHAPES["tiny"]} if args.tiny else SHAPES
+    for name, (t, c, e) in shapes.items():
+        for family in FAMILIES:
+            entry = tune_tiles(family, t, c, e, reps=args.reps)
+            print(f"{name} {family}: {json.dumps(entry)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,216 @@
+"""Versioned tile/knob table for the kernel autotuner.
+
+The linkload/queueloss Pallas wrappers and the PDHG solver used to hard-code
+their block sizes (128-tiles everywhere, ``dual_topk = 128``,
+``fleet_batch_quantum = 16``).  This module is the shared lookup they consult
+instead: a small JSON table keyed per (kernel family, backend, device kind,
+problem-shape bucket), merged from two layers —
+
+  1. **committed defaults** shipped with the package
+     (``repro/kernels/autotune/defaults/<device-kind>.json``) — winners from
+     a reference tuning run, so fresh checkouts get tuned tiles with no
+     warm-up; and
+  2. a **user cache** (``~/.cache/repro-autotune/table_v<N>.json``, override
+     with ``REPRO_AUTOTUNE_CACHE``) written by :mod:`repro.kernels.autotune
+     .tuner` — re-tuned winners for this machine, which shadow the committed
+     defaults key-by-key.
+
+Every write goes through an atomic tmp-file replace, and any ``OSError``
+(read-only home, concurrent CI sandboxes, cache dir shadowed by a file)
+degrades to in-memory-only operation — the table is a performance hint, never
+a correctness dependency.  Set ``REPRO_AUTOTUNE=0`` to ignore the table
+entirely and run on the fixed legacy defaults.
+
+Correctness contract: a table entry can only change *where the tile
+boundaries fall*, never what is summed — the tuner certifies every winner's
+outputs bit-identical against the default tiling before it is recorded (see
+``tuner.py``), so consulting the table never changes metric outputs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+import threading
+
+__all__ = [
+    "TABLE_VERSION", "DEFAULT_TILES", "DEFAULT_SOLVER_KNOBS",
+    "device_kind", "shape_bucket", "tile_key", "solver_key",
+    "TuneTable", "get_table", "reset_table",
+    "resolve_tiles", "solver_knobs", "pad_to", "shrink_bt", "enabled",
+]
+
+# bump when the key schema or entry layout changes: old on-disk caches are
+# ignored (they keep their own versioned filename) rather than misread
+TABLE_VERSION = 1
+
+DEFAULT_TILES = {"bt": 128, "be": 128, "bc": 128}
+DEFAULT_SOLVER_KNOBS = {"dual_topk": 128, "fleet_batch_quantum": 16}
+
+_DEFAULTS_DIR = pathlib.Path(__file__).resolve().parent / "defaults"
+
+
+def enabled() -> bool:
+    """Table lookups are on unless ``REPRO_AUTOTUNE=0`` pins legacy tiles."""
+    return os.environ.get("REPRO_AUTOTUNE", "1") != "0"
+
+
+def device_kind() -> str:
+    """Sanitized device kind of the default backend ("cpu", "tpu-v4", ...)."""
+    import jax
+
+    kind = jax.devices()[0].device_kind
+    return "".join(c if c.isalnum() else "-" for c in kind.lower()).strip("-")
+
+
+def shape_bucket(n: int) -> int:
+    """Next power of two ≥ max(n, 8) — nearby problem sizes share one entry
+    (and one tuning run) instead of fragmenting the table per exact shape."""
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+def tile_key(family: str, backend: str, t: int, c: int, e: int) -> str:
+    """Table key for one kernel-family tiling decision."""
+    return (f"{family}/{backend}/{device_kind()}/"
+            f"t{shape_bucket(t)}-c{shape_bucket(c)}-e{shape_bucket(e)}")
+
+
+def solver_key(v: int, m: int) -> str:
+    """Table key for the PDHG knobs of a (pods, critical-TMs) solver shape."""
+    return f"pdhg/{device_kind()}/v{shape_bucket(v)}-m{shape_bucket(m)}"
+
+
+def _cache_dir() -> pathlib.Path:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path.home() / ".cache" / "repro-autotune"
+
+
+def _cache_file() -> pathlib.Path:
+    return _cache_dir() / f"table_v{TABLE_VERSION}.json"
+
+
+class TuneTable:
+    """Merged committed-defaults + user-cache table with write-through."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: dict[str, dict] = {}
+        self._persist_ok = True
+        self._load()
+
+    def _load(self):
+        default_file = _DEFAULTS_DIR / f"{device_kind()}.json"
+        for path in (default_file, _cache_file()):
+            try:
+                self._entries.update(json.loads(path.read_text()))
+            except (OSError, ValueError):
+                continue
+
+    def get(self, key: str) -> dict | None:
+        with self._lock:
+            return self._entries.get(key)
+
+    def put(self, key: str, entry: dict, persist: bool = True):
+        with self._lock:
+            self._entries[key] = dict(entry)
+            if persist and self._persist_ok:
+                self._write()
+
+    def _write(self):
+        """Atomic write-through of the *user-tuned* entries; any filesystem
+        trouble permanently degrades this table to in-memory-only."""
+        try:
+            cache = _cache_file()
+            cache.parent.mkdir(parents=True, exist_ok=True)
+            merged: dict = {}
+            try:
+                merged = json.loads(cache.read_text())
+            except (OSError, ValueError):
+                pass
+            merged.update(self._entries)
+            fd, tmp = tempfile.mkstemp(dir=str(cache.parent), suffix=".tmp")
+            with os.fdopen(fd, "w") as fh:
+                json.dump(merged, fh, indent=1, sort_keys=True)
+            os.replace(tmp, cache)
+        except OSError:
+            self._persist_ok = False
+
+    def entries(self) -> dict:
+        with self._lock:
+            return dict(self._entries)
+
+
+_TABLE: TuneTable | None = None
+_TABLE_LOCK = threading.Lock()
+
+
+def get_table() -> TuneTable:
+    global _TABLE
+    with _TABLE_LOCK:
+        if _TABLE is None:
+            _TABLE = TuneTable()
+        return _TABLE
+
+
+def reset_table():
+    """Drop the singleton (tests repoint ``REPRO_AUTOTUNE_CACHE`` mid-process)."""
+    global _TABLE
+    with _TABLE_LOCK:
+        _TABLE = None
+
+
+def resolve_tiles(family: str, t: int, c: int, e: int, backend: str = "pallas",
+                  bt: int | None = None, be: int | None = None,
+                  bc: int | None = None) -> tuple[int, int, int]:
+    """Fill unset tile sizes from the table (explicit values are pins).
+
+    Falls back to the legacy fixed 128-tiles when the table has no entry for
+    this (family, backend, device, shape-bucket) or autotuning is disabled.
+    """
+    entry = None
+    if enabled() and (bt is None or be is None or bc is None):
+        entry = get_table().get(tile_key(family, backend, t, c, e))
+    src = entry if entry is not None else DEFAULT_TILES
+    return (int(bt if bt is not None else src["bt"]),
+            int(be if be is not None else src["be"]),
+            int(bc if bc is not None else src["bc"]))
+
+
+def solver_knobs(v: int, m: int) -> dict:
+    """PDHG ``dual_topk`` / ``fleet_batch_quantum`` for a solver shape."""
+    out = dict(DEFAULT_SOLVER_KNOBS)
+    if enabled():
+        entry = get_table().get(solver_key(v, m))
+        if entry is not None:
+            out.update({k: int(entry[k]) for k in out if k in entry})
+    return out
+
+
+# ---- shared tile-geometry helpers (used by every kernel wrapper) ------------
+
+
+def pad_to(x, axis: int, mult: int):
+    """Zero-pad ``x`` along ``axis`` to the next multiple of ``mult``."""
+    import numpy as np
+
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, pad)
+    return np.pad(x, width)
+
+
+def shrink_bt(bt: int, t: int) -> int:
+    """Clamp the time-tile to the (8-aligned) block length: transition drain
+    stages and tiny CI sweeps score blocks of a handful of rows, where a
+    fixed 128-row tile would be almost entirely padding."""
+    return max(8, min(bt, -(-t // 8) * 8))

@@ -1,0 +1,213 @@
+"""Search the tile/knob space and record certified winners in the table.
+
+Tile tuning (:func:`tune_tiles`) times each candidate ``(bt, be, bc)`` on
+representative random inputs and — before a candidate may win — verifies its
+outputs **bit-identical** against the default-128 tiling.  Changing the time
+tile ``bt`` only moves where the per-row grid is cut (each output row's
+reduction order is unchanged), but changing ``be``/``bc`` reorders the
+edge/commodity summation and generally perturbs the last float bit; such
+candidates are measurably faster still, and are rejected.  The certification
+is empirical per tuned shape, not assumed, so the table can safely hold a
+``be``/``bc`` winner on a backend/device where the reduction order turns out
+to be preserved.
+
+Solver tuning (:func:`tune_solver`) searches the PDHG ``dual_topk`` support
+cap and the fleet batch quantum.  These *do* change the iterate path, so the
+gate is the solver's own convergence contract instead of bit-identity: a
+candidate is eligible only if its certified objective matches the default
+configuration within the solver tolerance.
+
+Run ``python -m repro.kernels.autotune`` to tune the standard shapes and
+persist the winners to the user cache.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.kernels.autotune import table as _table
+
+__all__ = ["tune_tiles", "tune_solver", "tile_candidates", "FAMILIES"]
+
+#: wrapper call signature per family: fn(demand, weights, caps, ...) with the
+#: shapes produced by :func:`_family_inputs`
+FAMILIES = ("linkload", "linkload_batched", "linkload_fleet",
+            "queueloss", "queueloss_batched", "queueloss_fleet")
+
+
+def _time(fn, reps: int = 3) -> float:
+    fn()  # compile/warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def tile_candidates(t: int, c: int, e: int) -> list[tuple[int, int, int]]:
+    """Candidate tilings for a (t, c, e) problem, default-first.
+
+    ``bt`` sweeps up to the full (bucketed) time extent — on CPU interpret
+    mode the per-grid-step dispatch overhead dominates, so fewer/taller time
+    tiles are the main lever; ``be``/``bc`` sweep one doubling (they change
+    summation order and usually fail certification, but are kept in the pool
+    for backends that preserve it).
+    """
+    tb = _table.shape_bucket(t)
+    bts = sorted({bt for bt in (64, 128, 256, 512) if bt <= max(tb, 64)})
+    cands = [(128, 128, 128)]
+    cands += [(bt, 128, 128) for bt in bts if bt != 128]
+    best_bt = max(bts)
+    cands += [(best_bt, 256, 128), (best_bt, 128, 256), (best_bt, 256, 256)]
+    seen, out = set(), []
+    for cand in cands:
+        if cand not in seen:
+            seen.add(cand)
+            out.append(cand)
+    return out
+
+
+def _family_inputs(family: str, t: int, c: int, e: int, seed: int = 0):
+    """Representative random inputs + the wrapper for one kernel family."""
+    from repro.kernels.linkload import ops as ll
+    from repro.kernels.queueloss import ops as ql
+
+    rng = np.random.default_rng(seed)
+    lead = ()
+    if family.endswith("_batched"):
+        lead = (4,)
+    elif family.endswith("_fleet"):
+        lead = (2, 2)
+    d = rng.gamma(2.0, 10.0, lead + (t, c))
+    w = rng.random(lead + (c, e))
+    cap = rng.uniform(100.0, 900.0, lead + (e,))
+    if family.startswith("linkload"):
+        fn = {"linkload": ll.link_metrics,
+              "linkload_batched": ll.link_metrics_batched,
+              "linkload_fleet": ll.link_metrics_fleet}[family]
+
+        def call(bt, be, bc):
+            return fn(d, w, cap, backend="pallas", bt=bt, be=be, bc=bc)
+    else:
+        buf = rng.uniform(5.0, 50.0, lead + (e,))
+        fn = {"queueloss": ql.queue_loss,
+              "queueloss_batched": ql.queue_loss_batched,
+              "queueloss_fleet": ql.queue_loss_fleet}[family]
+
+        def call(bt, be, bc):
+            return fn(d, w, cap, buf, 0.05, backend="pallas",
+                      bt=bt, be=be, bc=bc)
+    return call
+
+
+def _identical(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y), equal_nan=True)
+               for x, y in zip(a, b))
+
+
+def tune_tiles(family: str, t: int, c: int, e: int, backend: str = "pallas",
+               reps: int = 3, seed: int = 0, persist: bool = True) -> dict:
+    """Tune one (family, shape-bucket) key and record the winner.
+
+    Returns the recorded entry: winning tiles, measured default/tuned seconds
+    and speedup, and the (always-True, by construction) ``bit_identical``
+    certification flag.
+    """
+    assert family in FAMILIES, family
+    call = _family_inputs(family, t, c, e, seed)
+    dt = _table.DEFAULT_TILES
+    ref = call(dt["bt"], dt["be"], dt["bc"])
+    default_s = _time(lambda: call(dt["bt"], dt["be"], dt["bc"]), reps)
+    best = (default_s, (dt["bt"], dt["be"], dt["bc"]))
+    for cand in tile_candidates(t, c, e):
+        if cand == (dt["bt"], dt["be"], dt["bc"]):
+            continue
+        bt, be, bc = cand
+        if not _identical(ref, call(bt, be, bc)):
+            continue  # reordered reduction: ineligible, however fast
+        cand_s = _time(lambda: call(bt, be, bc), reps)
+        if cand_s < best[0]:
+            best = (cand_s, cand)
+    tuned_s, (bt, be, bc) = best
+    entry = {"bt": bt, "be": be, "bc": bc,
+             "default_s": round(default_s, 6), "tuned_s": round(tuned_s, 6),
+             "speedup": round(default_s / max(tuned_s, 1e-12), 3),
+             "bit_identical": True}
+    _table.get_table().put(_table.tile_key(family, backend, t, c, e),
+                           entry, persist=persist)
+    return entry
+
+
+def tune_solver(fabric, m: int, reps: int = 2, batch: int = 8,
+                seed: int = 0, persist: bool = True) -> dict:
+    """Tune the PDHG ``dual_topk`` / ``fleet_batch_quantum`` knobs.
+
+    ``dual_topk`` candidates are gated on the solver's own convergence
+    contract: the candidate's certified stage-1 objective must match the
+    default configuration's within the solver tolerance (a too-small support
+    cap slows or stalls convergence — that shows up here as either a slower
+    time or an objective mismatch, and the candidate loses either way).
+
+    The batch quantum trades padding waste against per-element vmap
+    efficiency; it is chosen by timing one warm batched solve per candidate
+    quantum at a representative fleet batch size and minimizing the padded
+    cost per *real* element.
+    """
+    from repro.core.jaxlp import JaxRoutingSolver
+
+    rng = np.random.default_rng(seed)
+    v = fabric.n_pods
+    c = v * (v - 1)
+    tms = rng.gamma(2.0, 10.0, (batch, m, c))
+    caps = rng.uniform(100.0, 900.0, (batch, c))
+
+    def run(solver, b=None):
+        t = tms if b is None else tms[:1].repeat(b, axis=0)
+        cp = caps if b is None else caps[:1].repeat(b, axis=0)
+        import jax
+
+        d3 = np.stack([np.asarray(solver._dense_tms(x)) for x in t])
+        ic = np.stack([np.asarray(solver._dense_inv_cap(x)) for x in cp])
+        out = jax.block_until_ready(solver._solve_mlu_batch(
+            d3, ic, solver._tile_valid(d3.shape[0])))
+        return np.asarray(out[1], np.float64)  # per-element u*
+
+    default = dict(_table.DEFAULT_SOLVER_KNOBS)
+    ref_solver = JaxRoutingSolver(fabric, m, dual_topk=default["dual_topk"],
+                                  fleet_batch_quantum=1)
+    u_ref = run(ref_solver)
+    default_s = _time(lambda: run(ref_solver), reps)
+    tol = ref_solver.tol
+    best = (default_s, default["dual_topk"])
+    for k in (32, 64, 256):
+        if k >= c * (v - 1) or k == default["dual_topk"]:
+            continue
+        cand = JaxRoutingSolver(fabric, m, dual_topk=k, fleet_batch_quantum=1)
+        u_cand = run(cand)
+        if not np.all(np.abs(u_cand - u_ref)
+                      <= 2.0 * tol * np.maximum(np.abs(u_ref), 1e-6)):
+            continue  # convergence contract violated: ineligible
+        cand_s = _time(lambda: run(cand), reps)
+        if cand_s < best[0]:
+            best = (cand_s, k)
+    topk_s, topk = best
+
+    # batch quantum: padded cost per real element at a representative size
+    # one element past each candidate quantum (the worst padding case)
+    best_q = (np.inf, default["fleet_batch_quantum"])
+    probe = JaxRoutingSolver(fabric, m, dual_topk=topk, fleet_batch_quantum=1)
+    for q in (4, 8, 16, 32):
+        n_real = q + 1
+        padded = -(-n_real // q) * q
+        per_el = _time(lambda: run(probe, b=padded), reps) / n_real
+        if per_el < best_q[0] * (1.0 - 1e-3):  # ties keep the smaller quantum
+            best_q = (per_el, q)
+    entry = {"dual_topk": int(topk),
+             "fleet_batch_quantum": int(best_q[1]),
+             "default_s": round(default_s, 6), "tuned_s": round(topk_s, 6),
+             "speedup": round(default_s / max(topk_s, 1e-12), 3)}
+    _table.get_table().put(_table.solver_key(v, m), entry, persist=persist)
+    return entry

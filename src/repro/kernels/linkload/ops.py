@@ -4,6 +4,11 @@ Handles padding to tile multiples, capacity normalization, dead-link masking,
 and converting the kernel's raw accumulators (sums/counts) into the simulator's
 MLU / ALU / OLR / total-load metrics.  ``backend`` selects the Pallas kernel
 (interpret-mode on CPU), the pure-jnp reference, or numpy.
+
+Tile sizes default to ``None`` = consult the autotune table
+(:mod:`repro.kernels.autotune`) for this device/shape; pass explicit values
+to pin them.  Any tiling the table can return yields bit-identical outputs
+(tuner-certified), so this is purely a speed knob.
 """
 
 from __future__ import annotations
@@ -12,6 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.autotune.table import (pad_to as _pad_to,
+                                          resolve_tiles,
+                                          shrink_bt as _shrink_bt)
 from repro.kernels.linkload.linkload import (linkload_pallas,
                                              linkload_pallas_batched,
                                              linkload_pallas_fleet)
@@ -22,26 +30,10 @@ from repro.kernels.linkload.ref import (linkload_metrics_batched_ref,
 __all__ = ["link_metrics", "link_metrics_batched", "link_metrics_fleet"]
 
 
-def _pad_to(x: np.ndarray, axis: int, mult: int) -> np.ndarray:
-    n = x.shape[axis]
-    pad = (-n) % mult
-    if pad == 0:
-        return x
-    width = [(0, 0)] * x.ndim
-    width[axis] = (0, pad)
-    return np.pad(x, width)
-
-
-def _shrink_bt(bt: int, t: int) -> int:
-    """Clamp the time-tile to the (8-aligned) block length: transition drain
-    stages and tiny CI sweeps score blocks of a handful of intervals, where a
-    fixed 128-row tile would be almost entirely padding."""
-    return max(8, min(bt, -(-t // 8) * 8))
-
-
 def link_metrics(demand, weights, capacities, threshold: float = 0.8,
                  backend: str = "pallas",
-                 bt: int = 128, be: int = 128, bc: int = 128):
+                 bt: int | None = None, be: int | None = None,
+                 bc: int | None = None):
     """Per-interval (mlu, alu, olr, total_load) for a (T, C) demand block.
 
     ALU and OLR are averaged over *live* links (capacity > 0) only; padded
@@ -56,6 +48,8 @@ def link_metrics(demand, weights, capacities, threshold: float = 0.8,
 
     t_orig = demand.shape[0]
     if backend == "pallas":
+        bt, be, bc = resolve_tiles("linkload", t_orig, demand.shape[1],
+                                   weights.shape[1], backend, bt, be, bc)
         bt = _shrink_bt(bt, t_orig)
         d = _pad_to(demand, 0, bt)
         d = _pad_to(d, 1, bc)
@@ -85,7 +79,8 @@ def link_metrics(demand, weights, capacities, threshold: float = 0.8,
 
 def link_metrics_batched(demand, weights, capacities, threshold: float = 0.8,
                          backend: str = "pallas",
-                         bt: int = 128, be: int = 128, bc: int = 128):
+                         bt: int | None = None, be: int | None = None,
+                         bc: int | None = None):
     """Epoch-batched :func:`link_metrics`: one call scores every routing epoch
     of a controller sweep.
 
@@ -109,6 +104,9 @@ def link_metrics_batched(demand, weights, capacities, threshold: float = 0.8,
 
     t_orig = demand.shape[1]
     if backend == "pallas":
+        bt, be, bc = resolve_tiles("linkload_batched", t_orig,
+                                   demand.shape[2], weights.shape[2],
+                                   backend, bt, be, bc)
         bt = _shrink_bt(bt, t_orig)
         d = _pad_to(_pad_to(demand.astype(np.float32), 1, bt), 2, bc)
         w = _pad_to(_pad_to(weights.astype(np.float32), 1, bc), 2, be)
@@ -138,7 +136,8 @@ def link_metrics_batched(demand, weights, capacities, threshold: float = 0.8,
 
 def link_metrics_fleet(demand, weights, capacities, threshold: float = 0.8,
                        backend: str = "pallas",
-                       bt: int = 128, be: int = 128, bc: int = 128):
+                       bt: int | None = None, be: int | None = None,
+                       bc: int | None = None):
     """Fabric-batched :func:`link_metrics_batched`: one call scores every
     scoring block of every fabric in a fleet bucket.
 
@@ -162,6 +161,9 @@ def link_metrics_fleet(demand, weights, capacities, threshold: float = 0.8,
 
     t_orig = demand.shape[2]
     if backend == "pallas":
+        bt, be, bc = resolve_tiles("linkload_fleet", t_orig,
+                                   demand.shape[3], weights.shape[3],
+                                   backend, bt, be, bc)
         bt = _shrink_bt(bt, t_orig)
         d = _pad_to(_pad_to(demand.astype(np.float32), 2, bt), 3, bc)
         w = _pad_to(_pad_to(weights.astype(np.float32), 2, bc), 3, be)

@@ -6,6 +6,12 @@ oracle (:func:`repro.burst.queue.queue_loss_numpy` — kept jax-free there;
 the f32 casts below apply to the kernel backends only).  All backends
 implement the same finite-buffer fluid-queue recurrence; padded links get
 ``cap = buf = 0`` and carry zero load, so they never drop.
+
+Tile sizes default to ``None`` = consult the autotune table
+(:mod:`repro.kernels.autotune`); explicit values pin them.  Table winners are
+certified bit-identical against the default tiling, and the short-block
+time-tile clamp (``shrink_bt``) applies on top of either, so a 3-sub-step
+drain stage pads to 8 rows, never 128.
 """
 
 from __future__ import annotations
@@ -14,6 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.autotune.table import (pad_to as _pad_to,
+                                          resolve_tiles,
+                                          shrink_bt as _shrink_bt)
 from repro.kernels.queueloss.queueloss import (queueloss_pallas,
                                                queueloss_pallas_batched,
                                                queueloss_pallas_fleet)
@@ -23,26 +32,10 @@ from repro.kernels.queueloss.ref import (queueloss_batched_ref,
 __all__ = ["queue_loss", "queue_loss_batched", "queue_loss_fleet"]
 
 
-def _pad_to(x: np.ndarray, axis: int, mult: int) -> np.ndarray:
-    n = x.shape[axis]
-    pad = (-n) % mult
-    if pad == 0:
-        return x
-    width = [(0, 0)] * x.ndim
-    width[axis] = (0, pad)
-    return np.pad(x, width)
-
-
-def _shrink_bt(bt: int, ts: int) -> int:
-    """Clamp the time-tile to the (8-aligned) sub-step count: transition
-    drain stages and tiny CI sweeps scan a handful of sub-steps, where a
-    fixed 128-row tile would be almost entirely padding."""
-    return max(8, min(bt, -(-ts // 8) * 8))
-
-
 def queue_loss(demand, weights, capacities, buffers, dt: float,
                backend: str = "pallas",
-               bt: int = 128, be: int = 128, bc: int = 128):
+               bt: int | None = None, be: int | None = None,
+               bc: int | None = None):
     """Per-sub-step (drop_sum, load_sum) for a (TS, C) sub-interval demand
     block routed by ``weights (C, E)`` over links with ``capacities (E,)``
     (Gb/s) and finite buffers ``buffers (E,)`` (Gb); ``dt`` is the sub-step
@@ -61,6 +54,8 @@ def queue_loss(demand, weights, capacities, buffers, dt: float,
     buf = np.asarray(buffers, np.float32)
     ts_orig = demand.shape[0]
     if backend == "pallas":
+        bt, be, bc = resolve_tiles("queueloss", ts_orig, demand.shape[1],
+                                   weights.shape[1], backend, bt, be, bc)
         bt = _shrink_bt(bt, ts_orig)
         d = _pad_to(demand, 0, bt)
         d = _pad_to(d, 1, bc)
@@ -83,7 +78,8 @@ def queue_loss(demand, weights, capacities, buffers, dt: float,
 
 def queue_loss_batched(demand, weights, capacities, buffers, dt: float,
                        backend: str = "pallas",
-                       bt: int = 128, be: int = 128, bc: int = 128):
+                       bt: int | None = None, be: int | None = None,
+                       bc: int | None = None):
     """Epoch-batched :func:`queue_loss`: one call scans every routing epoch.
 
     Args:
@@ -107,6 +103,9 @@ def queue_loss_batched(demand, weights, capacities, buffers, dt: float,
     buf = np.asarray(buffers, np.float32)
     ts_orig = demand.shape[1]
     if backend == "pallas":
+        bt, be, bc = resolve_tiles("queueloss_batched", ts_orig,
+                                   demand.shape[2], weights.shape[2],
+                                   backend, bt, be, bc)
         bt = _shrink_bt(bt, ts_orig)
         d = _pad_to(_pad_to(demand, 1, bt), 2, bc)
         w = _pad_to(_pad_to(weights, 1, bc), 2, be)
@@ -127,7 +126,8 @@ def queue_loss_batched(demand, weights, capacities, buffers, dt: float,
 
 def queue_loss_fleet(demand, weights, capacities, buffers, dt: float,
                      backend: str = "pallas",
-                     bt: int = 128, be: int = 128, bc: int = 128):
+                     bt: int | None = None, be: int | None = None,
+                     bc: int | None = None):
     """Fabric-batched :func:`queue_loss_batched`: one call scans every scoring
     block of every fabric in a fleet bucket.
 
@@ -154,6 +154,9 @@ def queue_loss_fleet(demand, weights, capacities, buffers, dt: float,
     buf = np.asarray(buffers, np.float32)
     ts_orig = demand.shape[2]
     if backend == "pallas":
+        bt, be, bc = resolve_tiles("queueloss_fleet", ts_orig,
+                                   demand.shape[3], weights.shape[3],
+                                   backend, bt, be, bc)
         bt = _shrink_bt(bt, ts_orig)
         d = _pad_to(_pad_to(demand, 2, bt), 3, bc)
         w = _pad_to(_pad_to(weights, 2, bc), 3, be)

@@ -81,20 +81,57 @@ def fleet_mesh(devices=None) -> Mesh:
     return Mesh(np.asarray(devices), ("fleet",))
 
 
-def shard_leading(fn, mesh: Mesh):
+def shard_leading(fn, mesh: Mesh, repack: bool = False):
     """``shard_map`` a batched function over the leading axis of every input
     and output, along ``mesh``'s first axis.
 
     ``fn`` must be elementwise along its leading batch axis (e.g. a
     ``jax.vmap``-wrapped per-element solve) so sharding it is a pure data
-    split — no collectives.  Callers pad the batch to a multiple of the axis
-    size.
+    split — no collectives.
+
+    With ``repack=False`` callers pad the batch to a multiple of the axis
+    size (the legacy contract).  With ``repack=True`` any batch size works:
+    the wrapper pads the remainder by replaying real leading elements (the
+    donated rows converge with their originals) and deals elements to devices
+    **round-robin** instead of in contiguous blocks — element ``i`` lands on
+    device ``i % D``.  Per-device programs run independently until the final
+    gather, and neighbouring elements (sliding-window epochs, same-fabric
+    blocks) have correlated solve difficulty, so contiguous sharding hands
+    one device all the hard elements; the round-robin deal splits both the
+    remainder and the workload evenly.  Outputs are inverse-permuted and
+    trimmed, so results are elementwise identical to the unsharded call.
     """
+    import jax.numpy as jnp
+    import numpy as np
     from jax.experimental.shard_map import shard_map
 
     spec = P(mesh.axis_names[0])
-    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec,
-                     check_rep=False)
+    sm = shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec,
+                   check_rep=False)
+    if not repack:
+        return sm
+
+    d = int(mesh.devices.size)
+
+    def repacked(*args):
+        n = int(args[0].shape[0])
+        if d == 1 or n % d == 0:
+            # shard-major == round-robin is irrelevant when even; skip the
+            # gathers (and keep the d == 1 smoke path bit-trivial)
+            return sm(*args)
+        rows = -(-n // d)  # per-device rows after the deal
+        target = rows * d
+        # position p (shard-major) holds element ((p % rows) * d + p // rows),
+        # cycled over the real prefix for the replayed remainder
+        p = np.arange(target)
+        gather = jnp.asarray(((p % rows) * d + p // rows) % n)
+        out = sm(*[a[gather] for a in args])
+        # element e sits at position (e % d) * rows + e // d
+        e = np.arange(n)
+        inv = jnp.asarray((e % d) * rows + e // d)
+        return jax.tree_util.tree_map(lambda o: o[inv], out)
+
+    return repacked
 
 
 def dp_axes(mesh: Mesh | None = None):

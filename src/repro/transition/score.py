@@ -129,7 +129,8 @@ def score_stage_batch(fabric: Fabric, tms: np.ndarray, capacities: np.ndarray,
                                for i in range(b)])
         if cc.solver_backend == "pdhg":
             solver = routing_solver_for(fabric, cc.k_critical,
-                                        cc.pdhg_max_iters, cc.pdhg_tol)
+                                        cc.pdhg_max_iters, cc.pdhg_tol,
+                                        cc.solver_precision)
             tms_b = np.broadcast_to(_pad_tms(tms, cc.k_critical),
                                     (b, cc.k_critical, tms.shape[1]))
             out = solver.solve_routing_batch(

@@ -1,0 +1,160 @@
+"""Autotune table/tuner correctness: fallback behavior, cross-process cache
+reuse, read-only degrade, and — the load-bearing contract — that no legal
+tile choice ever changes a metric output bit.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.kernels.autotune import (DEFAULT_SOLVER_KNOBS, DEFAULT_TILES,
+                                    get_table, reset_table, resolve_tiles,
+                                    shape_bucket, shrink_bt, solver_knobs,
+                                    tile_key, tune_tiles)
+
+SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    """Point the table at a private empty cache and drop the singleton."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "cache"))
+    reset_table()
+    yield tmp_path / "cache"
+    reset_table()
+
+
+def _inputs(t=48, c=24, e=24, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.gamma(2.0, 10.0, (t, c)), rng.random((c, e)),
+            rng.uniform(100.0, 900.0, e))
+
+
+def test_shape_bucket_and_shrink():
+    assert [shape_bucket(n) for n in (1, 8, 9, 100, 128, 129)] == \
+        [8, 8, 16, 128, 128, 256]
+    assert shrink_bt(128, 3) == 8  # 3-row stage block: 8 rows, never 128
+    assert shrink_bt(128, 500) == 128  # never grows
+    assert shrink_bt(512, 500) == 504  # 8-aligned clamp
+
+
+def test_resolve_falls_back_to_defaults(tmp_cache):
+    """Unknown (family, shape) → legacy fixed tiles; explicit args pin."""
+    tiles = resolve_tiles("nosuchfamily", 512, 132, 132)
+    assert tiles == (DEFAULT_TILES["bt"], DEFAULT_TILES["be"],
+                     DEFAULT_TILES["bc"])
+    assert resolve_tiles("nosuchfamily", 512, 132, 132, bt=32, bc=64) == \
+        (32, DEFAULT_TILES["be"], 64)
+    assert solver_knobs(99, 99) == DEFAULT_SOLVER_KNOBS
+
+
+def test_kill_switch_ignores_table(tmp_cache, monkeypatch):
+    get_table().put(tile_key("linkload", "pallas", 48, 24, 24),
+                    {"bt": 8, "be": 8, "bc": 8}, persist=False)
+    assert resolve_tiles("linkload", 48, 24, 24) == (8, 8, 8)
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    assert resolve_tiles("linkload", 48, 24, 24) == \
+        tuple(DEFAULT_TILES.values())
+    assert solver_knobs(6, 4) == DEFAULT_SOLVER_KNOBS
+
+
+def test_tuner_records_certified_winner_and_cache_is_shared(tmp_cache):
+    """A tuning run must (1) record a bit-identity-certified entry that
+    resolve_tiles then serves, (2) persist it so a *separate process*
+    pointed at the same cache resolves the identical tiles."""
+    entry = tune_tiles("linkload", 48, 24, 24, reps=1)
+    assert entry["bit_identical"] is True
+    assert entry["tuned_s"] > 0 and entry["default_s"] > 0
+    tiles = (entry["bt"], entry["be"], entry["bc"])
+    assert resolve_tiles("linkload", 48, 24, 24) == tiles
+    # nearby shapes share the bucket (and therefore the entry)
+    assert resolve_tiles("linkload", 40, 20, 20) == tiles
+    cache_file = next((tmp_cache).glob("table_v*.json"))
+    assert tile_key("linkload", "pallas", 48, 24, 24) in \
+        json.loads(cache_file.read_text())
+    script = textwrap.dedent(f"""
+        from repro.kernels.autotune import resolve_tiles
+        print(resolve_tiles("linkload", 48, 24, 24))
+    """)
+    env = dict(os.environ, REPRO_AUTOTUNE_CACHE=str(tmp_cache),
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr
+    assert r.stdout.strip() == str(tiles)
+
+
+def test_unwritable_cache_degrades_to_memory(tmp_path, monkeypatch):
+    """Cache dir shadowed by a regular file (the root-proof stand-in for a
+    read-only filesystem): writes degrade permanently to in-memory, lookups
+    keep working, nothing raises."""
+    blocker = tmp_path / "blocker"
+    blocker.write_text("not a directory")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(blocker / "cache"))
+    reset_table()
+    try:
+        table = get_table()
+        table.put("some/key", {"bt": 64, "be": 128, "bc": 128}, persist=True)
+        assert table._persist_ok is False
+        assert table.get("some/key") == {"bt": 64, "be": 128, "bc": 128}
+        assert resolve_tiles("nosuchfamily", 48, 24, 24) == \
+            tuple(DEFAULT_TILES.values())
+    finally:
+        reset_table()
+
+
+def test_tile_choice_never_changes_outputs(tmp_cache):
+    """The correctness contract across all three backends: any table-legal
+    tiling bit-matches the default tiling (pallas), and tile arguments are
+    inert on the jnp/numpy backends."""
+    from repro.kernels.linkload import ops as ll
+
+    d, w, cap = _inputs()
+    ref = ll.link_metrics(d, w, cap, backend="pallas")
+    # bt only re-blocks rows — always bit-identical, any legal value
+    for bt in (8, 16, 64, 512):
+        got = ll.link_metrics(d, w, cap, backend="pallas", bt=bt)
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(a, b)
+    # a tuner-recorded winner (arbitrary bt/be/bc) is certified identical
+    entry = tune_tiles("linkload", *d.shape, w.shape[1], reps=1)
+    got = ll.link_metrics(d, w, cap, backend="pallas",
+                          bt=entry["bt"], be=entry["be"], bc=entry["bc"])
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+    for backend in ("jnp", "numpy"):
+        base = ll.link_metrics(d, w, cap, backend=backend)
+        tiled = ll.link_metrics(d, w, cap, backend=backend, bt=8, be=8, bc=8)
+        for a, b in zip(base, tiled):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_queueloss_small_stage_block_pads_to_8_not_128(tmp_cache, monkeypatch):
+    """Satellite regression: a 3-sub-step drain-stage block through the
+    queueloss wrapper must reach the kernel as 8 rows (shrunk + 8-aligned),
+    not padded out to the 128-row default tile."""
+    from repro.kernels.queueloss import ops as ql
+
+    seen = {}
+    real = ql.queueloss_pallas
+
+    def spy(d, w, cap, buf, dt, *, bt, be, bc, interpret):
+        seen["rows"], seen["bt"] = d.shape[0], bt
+        return real(d, w, cap, buf, dt, bt=bt, be=be, bc=bc,
+                    interpret=interpret)
+
+    monkeypatch.setattr(ql, "queueloss_pallas", spy)
+    rng = np.random.default_rng(0)
+    drop, tot = ql.queue_loss(rng.gamma(2.0, 10.0, (3, 24)),
+                              rng.random((24, 24)),
+                              rng.uniform(100.0, 900.0, 24),
+                              rng.uniform(5.0, 50.0, 24), 0.05,
+                              backend="pallas")
+    assert seen == {"rows": 8, "bt": 8}
+    assert drop.shape == tot.shape == (3,)

@@ -123,6 +123,25 @@ def test_phase_floor_ignores_subsecond_jitter():
 
 def test_specs_cover_all_gated_artifacts():
     assert set(SPECS) == {"BENCH_engine.json", "BENCH_transition.json",
-                          "BENCH_fleet.json", "BENCH_failures.json"}
+                          "BENCH_fleet.json", "BENCH_failures.json",
+                          "BENCH_roofline.json"}
     for spec in SPECS.values():
         assert spec["time"], "every gated bench needs a wall-time metric"
+
+
+def test_achieved_fraction_gate_bites_and_self_normalizes():
+    """The roofline ratchet: a fraction collapse fails even when the runner
+    calibration says the machine got slower (the fraction is unscaled), and
+    a same-or-better fraction passes."""
+    base = {"_calibration_s": 1.0, "_wall_s": 0.1,
+            "aggregate": {"best_speedup": 1.3, "achieved_fraction":
+                          {"linkload": 0.04, "queueloss": 0.04,
+                           "pdhg_step": 0.08}}}
+    good = json.loads(json.dumps(base))
+    good["aggregate"]["achieved_fraction"]["linkload"] = 0.05
+    assert check("BENCH_roofline.json", good, base) == []
+    bad = json.loads(json.dumps(base))
+    bad["aggregate"]["achieved_fraction"]["queueloss"] = 0.01  # < 0.5x
+    bad["_calibration_s"] = 3.0  # a slower runner must NOT excuse it
+    fails = check("BENCH_roofline.json", bad, base)
+    assert fails and any("achieved_fraction.queueloss" in f for f in fails)

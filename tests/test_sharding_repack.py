@@ -1,0 +1,75 @@
+"""`shard_leading(repack=True)`: any leading batch size, results elementwise
+identical to the unsharded call.
+
+Multi-host-device cases run in a subprocess because the device count is baked
+into XLA at import (`--xla_force_host_platform_device_count`), and the main
+test process deliberately runs with stock single-device flags.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+
+
+def test_repack_single_device_any_batch():
+    """d == 1 short-circuits to the plain shard_map — every batch size works
+    in-process and matches the unsharded function bit for bit."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.parallel.sharding import fleet_mesh, shard_leading
+
+    fn = jax.vmap(lambda x: (jnp.cumsum(x) * jnp.tanh(x)).sum(keepdims=True))
+    mesh = fleet_mesh(jax.devices()[:1])
+    sharded = shard_leading(fn, mesh, repack=True)
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 5, 8):
+        x = jnp.asarray(rng.normal(size=(n, 16)), jnp.float32)
+        np.testing.assert_array_equal(np.asarray(sharded(x)),
+                                      np.asarray(fn(x)))
+
+
+_SUBPROC = textwrap.dedent("""
+    import jax, numpy as np, jax.numpy as jnp
+    from repro.parallel.sharding import fleet_mesh, shard_leading
+
+    d = int(%d)
+    assert jax.device_count() == d, jax.device_count()
+    # per-element "solve": nonlinear, order-sensitive along the feature axis,
+    # so any mis-permutation or row mixup changes the output
+    fn = jax.vmap(lambda x: jnp.stack([(jnp.cumsum(x) * jnp.tanh(x)).sum(),
+                                       x.max(), (x ** 2).sum()]))
+    mesh = fleet_mesh()
+    sharded = shard_leading(fn, mesh, repack=True)
+    rng = np.random.default_rng(7)
+    for n in (1, 2, 3, 5, 7, 8, 11):
+        x = jnp.asarray(rng.normal(size=(n, 24)), jnp.float32)
+        got, want = np.asarray(sharded(x)), np.asarray(fn(x))
+        assert got.shape == want.shape, (n, got.shape, want.shape)
+        assert np.array_equal(got, want), (n, np.abs(got - want).max())
+    print("ok")
+""")
+
+
+def _run_with_devices(d: int):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={d}",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    return subprocess.run([sys.executable, "-c", _SUBPROC % d], env=env,
+                          capture_output=True, text=True, timeout=300)
+
+
+def test_repack_multi_device_mixed_batches():
+    """The property the satellite demands: mixed bucket counts (1..11) on 2-
+    and 4-device host meshes produce results identical to the unsharded call
+    — round-robin deal + replayed-remainder padding + inverse permutation."""
+    for d in (2, 4):
+        r = _run_with_devices(d)
+        assert r.returncode == 0 and "ok" in r.stdout, (d, r.stdout, r.stderr)

@@ -1,0 +1,111 @@
+"""Mixed-precision (bf16) PDHG: accuracy contract, f32 certificate, and the
+``ControllerConfig.solver_precision`` threading through caches and bucket keys.
+
+The contract: ``precision="bf16"`` may round the *iterate path* (matvecs and
+einsums run in bfloat16 with f32 accumulation) but every reported quantity —
+the duality-gap certificate, the returned utilization, the objectives — is
+evaluated in f32 on the final flows.  MLU parity vs the f32 solver must stay
+within 1%.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import ControllerConfig, SolverConfig
+from repro.core.clustering import critical_tms
+from repro.core.engine import routing_solver_for
+from repro.core.fleet import (FLEET_SPECS, fleet_bucket_key, make_fabric,
+                              make_trace)
+from repro.core.graph import Fabric, uniform_topology
+from repro.core.jaxlp import JaxRoutingSolver
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def _instance(v=6, m=4, b=6, seed=0):
+    rng = np.random.default_rng(seed)
+    fabric = Fabric.homogeneous("mp", v, radix=40, speed=100.0)
+    cap = fabric.capacities(uniform_topology(fabric))
+    tms_b = np.stack([critical_tms(rng.gamma(2.0, 30.0, (50, v * (v - 1))),
+                                   k=m) for _ in range(b)])
+    caps_b = np.ascontiguousarray(np.broadcast_to(cap, (b, cap.shape[0])))
+    return fabric, tms_b, caps_b
+
+
+def test_bf16_mlu_parity_within_1pct():
+    """p99.9-MLU (max over a batch of solves here) from the bf16 solver must
+    sit within 1% of the f32 solver's — the ISSUE acceptance bar."""
+    fabric, tms_b, caps_b = _instance()
+    m = tms_b.shape[1]
+    kw = dict(max_iters=4000, dual_topk=128, fleet_batch_quantum=16)
+    u32 = JaxRoutingSolver(fabric, m, **kw).solve_mlu_batch(tms_b, caps_b)[1]
+    u16 = JaxRoutingSolver(fabric, m, precision="bf16",
+                           **kw).solve_mlu_batch(tms_b, caps_b)[1]
+    rel = np.abs(u16 - u32) / np.maximum(np.abs(u32), 1e-9)
+    assert rel.max() <= 0.01, (u32, u16)
+    # the batch-level tail statistic the engines report
+    assert abs(np.percentile(u16, 99.9) - np.percentile(u32, 99.9)) \
+        <= 0.01 * np.percentile(u32, 99.9)
+
+
+def test_bf16_certificate_and_reported_u_are_f32():
+    """The returned utilization must be the *f32* evaluation of the final
+    flows (not a bf16 by-product of the iterate path), and the solve must
+    actually run a bf16 iterate path (distinct from the f32 solver's)."""
+    import jax.numpy as jnp
+
+    fabric, tms_b, caps_b = _instance(b=1, seed=3)
+    m = tms_b.shape[1]
+    kw = dict(max_iters=1500, dual_topk=128, fleet_batch_quantum=16)
+    s16 = JaxRoutingSolver(fabric, m, precision="bf16", **kw)
+    d3 = s16._dense_tms(tms_b[0])
+    ic = s16._dense_inv_cap(caps_b[0])
+    f3, u, it, _, gap = s16._solve_mlu(d3, ic, s16.valid)
+    assert u.dtype == jnp.float32 and gap.dtype == jnp.float32
+    # reported u == f32 re-evaluation of the final flows, bit for bit
+    assert float(u) == float(s16._util_f32(f3, d3, ic).max())
+    # and the bf16 mode is live: its iterate path diverges from f32's
+    s32 = JaxRoutingSolver(fabric, m, **kw)
+    f3_32, u32, it32, _, _ = s32._solve_mlu(d3, ic, s32.valid)
+    assert (int(it) != int(it32)
+            or not np.array_equal(np.asarray(f3), np.asarray(f3_32)))
+
+
+def test_invalid_precision_rejected():
+    fabric, tms_b, _ = _instance(b=1)
+    with pytest.raises(AssertionError):
+        JaxRoutingSolver(fabric, tms_b.shape[1], precision="f16",
+                         dual_topk=128, fleet_batch_quantum=16)
+
+
+def test_solver_cache_keyed_by_precision():
+    """routing_solver_for must hand back different solver instances for
+    different precisions (a shared jit cache would silently cross modes) and
+    the same instance for a repeated identical request."""
+    fabric = Fabric.homogeneous("ck", 6, radix=40, speed=100.0)
+    a = routing_solver_for(fabric, 4, 1000, 5e-3, "f32")
+    b = routing_solver_for(fabric, 4, 1000, 5e-3, "bf16")
+    c = routing_solver_for(fabric, 4, 1000, 5e-3, "f32")
+    assert a is c and a is not b
+    assert a.precision == "f32" and b.precision == "bf16"
+
+
+def test_fleet_bucket_key_includes_precision():
+    """Fabrics configured with different solver precisions must never share
+    a fleet bucket (one bucket = one solver), while both positional contracts
+    the fleet engine relies on survive: ``key[:5]`` is the PDHG batch
+    geometry and ``key[-1]`` the trace cadence in minutes."""
+    cc = ControllerConfig(routing_interval_hours=12.0, k_critical=4)
+    sc = SolverConfig(stage1_method="scaled")
+    fab = make_fabric(FLEET_SPECS[0])
+    tr = make_trace(FLEET_SPECS[0], fab, days=4.0, interval_minutes=120.0)
+    k_f32 = fleet_bucket_key(fab, cc, sc, tr)
+    k_bf16 = fleet_bucket_key(
+        fab, dataclasses.replace(cc, solver_precision="bf16"), sc, tr)
+    assert k_f32 != k_bf16
+    assert k_f32[:5] == k_bf16[:5]
+    assert (k_f32[5], k_bf16[5]) == ("f32", "bf16")
+    assert k_f32[-1] == k_bf16[-1] == 120.0  # fleet_engine scales key[-1]
+    assert ControllerConfig().solver_precision == "f32"  # default unchanged
