@@ -1,0 +1,194 @@
+"""Serve bench: streaming controller throughput, decision latency, and the
+warm-start PDHG win.
+
+Drives the online mode (:mod:`repro.serve`) over recorded fleet traces and
+measures what a deployed controller cares about:
+
+* **time-to-new-weights** — per routing epoch, TM arrival → installed weight
+  matrix, reported as p50/p99/max (the SLO surface the CI ``latency_slo``
+  regression gate sits on);
+* **sustained ingest throughput** — intervals/sec over the whole replay
+  (scoring included), i.e. how much faster than real time the controller
+  replays a trace;
+* **warm vs cold PDHG** — the same stream solved with
+  ``ServeConfig(warm_start=True)`` (each epoch's primal/dual iterates seed
+  the next solve) and ``warm_start=False`` (every epoch cold), paired into
+  per-stage median-iteration savings (:func:`repro.obs.warm_start_savings`).
+  The non-tiny run asserts the warm start actually saves iterations;
+* **replay parity** — p99.9-metric relative deltas vs the offline batched
+  engine on the identical trace (exact-decision parity is test-enforced in
+  ``tests/test_serve.py``; the bench keeps the numeric deltas visible).
+
+Timings are reported cold (first streaming run, jit compile included) and
+steady (second run, compiled kernels reused); latency percentiles come from
+the steady run only.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve          # default scale
+    PYTHONPATH=src python -m benchmarks.bench_serve --tiny   # CI smoke
+    PYTHONPATH=src python -m benchmarks.bench_serve --tiny --json BENCH_serve.json
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import SCALE, cached
+from repro import obs
+from repro.core import ControllerConfig, SolverConfig, Strategy, run_controller
+from repro.core.fleet import FLEET_SPECS, make_fabric, make_trace
+from repro.serve import ServeConfig, StreamingController, TMStream
+
+# F1 (predictable) + F3 (volatile): both latency profiles of the fleet, at a
+# 2-hourly re-plan cadence over a 9-day replay
+DEFAULT_PARAMS = dict(fabric_indices=(0, 2), days=9.0, interval_minutes=30.0,
+                      routing_interval_hours=2.0, topology_interval_days=2.0,
+                      aggregation_days=2.0, k_critical=8)
+# CI smoke: one small fabric, coarse cadence (~1 min)
+TINY_PARAMS = dict(fabric_indices=(16,), days=6.0, interval_minutes=120.0,
+                   routing_interval_hours=6.0, topology_interval_days=2.0,
+                   aggregation_days=2.0, k_critical=4)
+
+METRICS = ("p999_mlu", "p999_alu", "p999_olr", "p999_stretch")
+
+
+def _rel(a: float, b: float) -> float:
+    return abs(a - b) / max(abs(b), 1e-9)
+
+
+def _stream_run(fabric, trace, strat, cc, sc, warm: bool):
+    ctrl = StreamingController(
+        fabric, TMStream.from_trace(trace), strat, cc, sc,
+        serve=ServeConfig(warm_start=warm, auto_strategy=False))
+    return ctrl.run()
+
+
+def _run(scale: str) -> dict:
+    p = TINY_PARAMS if scale == "tiny" else DEFAULT_PARAMS
+    cc = ControllerConfig(
+        routing_interval_hours=p["routing_interval_hours"],
+        topology_interval_days=p["topology_interval_days"],
+        aggregation_days=p["aggregation_days"], k_critical=p["k_critical"],
+        solver_backend="pdhg")
+    sc = SolverConfig(stage1_method="scaled")
+    strat = Strategy(nonuniform=False, hedging=True)
+    rows = []
+    warm_stats, cold_stats = [], []
+    for idx in p["fabric_indices"]:
+        spec = FLEET_SPECS[idx]
+        fabric = make_fabric(spec)
+        trace = make_trace(spec, fabric, days=p["days"],
+                           interval_minutes=p["interval_minutes"])
+        t0 = time.time()
+        _stream_run(fabric, trace, strat, cc, sc, warm=True)  # jit compile
+        t_cold = time.time() - t0
+        t0 = time.time()
+        warm = _stream_run(fabric, trace, strat, cc, sc, warm=True)
+        t_steady = time.time() - t0
+        cold = _stream_run(fabric, trace, strat, cc, sc, warm=False)
+        offline = run_controller(fabric, trace, strat, cc, sc)
+        warm_stats.append(warm.result.solver_stats)
+        cold_stats.append(cold.result.solver_stats)
+        lat = warm.latency_quantiles()
+        savings = obs.warm_start_savings(warm.result.solver_stats,
+                                         cold.result.solver_stats)
+        rows.append({
+            "fabric": spec.name,
+            "pods": fabric.n_pods,
+            "n_intervals": warm.n_intervals,
+            "decisions": len(warm.decisions),
+            "stream_cold_s": round(t_cold, 2),  # first run: jit compile inside
+            "stream_steady_s": round(t_steady, 2),
+            "intervals_per_s": round(warm.intervals_per_s, 2),
+            "latency": {k: round(v, 4) for k, v in lat.items()},
+            "stage_times": warm.result.stage_times,
+            "warm_savings": savings,
+            "pdhg_warm": warm.result.solver_stats.to_dict(per_epoch=False),
+            "pdhg_cold": cold.result.solver_stats.to_dict(per_epoch=False),
+            "p999_rel_delta_vs_offline": {
+                k: round(_rel(warm.result.summary[k], offline.summary[k]), 4)
+                for k in METRICS},
+            "serve_summary": {k: warm.result.summary[k] for k in METRICS},
+            "offline_summary": {k: offline.summary[k] for k in METRICS},
+        })
+    savings_all = obs.warm_start_savings(obs.SolverStats.merge(warm_stats),
+                                         obs.SolverStats.merge(cold_stats))
+    agg = {
+        "scale": scale,
+        "n_fabrics": len(rows),
+        "n_intervals": int(sum(r["n_intervals"] for r in rows)),
+        "n_decisions": int(sum(r["decisions"] for r in rows)),
+        "stream_steady_total_s": round(
+            sum(r["stream_steady_s"] for r in rows), 2),
+        # sustained ingest rate across fabrics (steady runs)
+        "intervals_per_s": round(
+            sum(r["n_intervals"] for r in rows)
+            / max(sum(r["stream_steady_s"] for r in rows), 1e-9), 2),
+        # worst per-fabric decision latency (the SLO gate reads these)
+        "latency": {
+            "p50_s": round(max(r["latency"]["p50_s"] for r in rows), 4),
+            "p99_s": round(max(r["latency"]["p99_s"] for r in rows), 4),
+            "max_s": round(max(r["latency"]["max_s"] for r in rows), 4)},
+        "warm_savings": savings_all,
+        "max_p999_rel_delta_vs_offline": {
+            k: max(r["p999_rel_delta_vs_offline"][k] for r in rows)
+            for k in METRICS},
+    }
+    return {"rows": rows, "aggregate": agg}
+
+
+def run(force: bool = False, scale: str | None = None) -> dict:
+    scale = scale or SCALE
+    if scale == "tiny":  # CI smoke: always fresh, never cached
+        return _run("tiny")
+    return cached("serve", lambda: _run(scale), force, params=DEFAULT_PARAMS)
+
+
+def main() -> None:
+    import argparse
+    import json
+    import pathlib
+    import time as _time
+
+    from benchmarks.common import finalize
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: one small fabric, coarse cadence")
+    ap.add_argument("--force", action="store_true", help="ignore cached results")
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write the result to this JSON file")
+    ap.add_argument("--trace", type=str, default=None, metavar="TRACE.jsonl",
+                    help="enable repro.obs tracing and export the span trace "
+                         "as JSONL here (plus a Perfetto-loadable "
+                         "*.chrome.json alongside)")
+    args = ap.parse_args()
+    if args.trace:
+        obs.enable()
+    t0 = _time.time()
+    out = run(force=args.force, scale="tiny" if args.tiny else None)
+    finalize(out, t0)
+    if args.trace:
+        trace_path = pathlib.Path(args.trace)
+        obs.export_jsonl(trace_path)
+        chrome = trace_path.with_suffix(".chrome.json")
+        obs.export_chrome_trace(chrome)
+        print(f"trace: {trace_path} ({len(obs.events())} events); "
+              f"Perfetto-loadable copy at {chrome}")
+    print(json.dumps(out["aggregate"], indent=2))
+    for r in out["rows"]:
+        s = r["warm_savings"]["overall"]
+        print(f"{r['fabric']} (V={r['pods']}, {r['decisions']} decisions): "
+              f"{r['intervals_per_s']} intervals/s, "
+              f"p99 latency {r['latency']['p99_s']}s, "
+              f"warm/cold iters {s['iters_ratio']:.2f}")
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps(out, indent=2))
+    if not args.tiny:
+        ratio = out["aggregate"]["warm_savings"]["overall"]["iters_ratio"]
+        assert ratio < 1.0, (
+            "warm-started PDHG must reduce median iterations per epoch vs "
+            f"cold start at the default scale; got warm/cold ratio {ratio}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,12 @@ Rules per metric kind:
     but with a smaller absolute floor, so a single stage blowing up (e.g.
     scoring 3× slower while a faster solve hides it in the total) fails even
     when the end-to-end wall-time budget still passes.
+  * **latency_slo** — decision-latency percentiles (the serve bench's
+    time-to-new-weights p50/p99): same calibration-scaled budget rule as
+    **time** but with a much smaller absolute floor — these are sub-second
+    per-decision latencies, and a controller that takes 2× longer to react
+    to a demand shift is a regression even when the end-to-end replay still
+    fits the wall-time budget.
   * **lower** — quality metrics where bigger is worse (e.g. solver-parity
     deltas): fail when ``fresh > baseline + tol``.
   * **higher** — quality metrics where smaller is worse (e.g. skip counts,
@@ -37,6 +43,7 @@ copy (must fail), and against a quality-regressed copy (must fail).
     python -m benchmarks.check_regression BENCH_engine.json \
         BENCH_transition.json BENCH_fleet.json
     python -m benchmarks.check_regression --self-test
+    python -m benchmarks.check_regression --check-baselines
     python -m benchmarks.check_regression --update BENCH_*.json
 """
 
@@ -101,6 +108,20 @@ SPECS = {
             ("aggregate.achieved_fraction.pdhg_step", 0.5),
         ],
     },
+    "BENCH_serve.json": {
+        "time": ["aggregate.stream_steady_total_s", "_wall_s"],
+        # per-decision time-to-new-weights: the p99 is the serving SLO, the
+        # p50 keeps the typical epoch honest (a bimodal slowdown whose p99
+        # was already slow would otherwise hide)
+        "latency_slo": ["aggregate.latency.p99_s", "aggregate.latency.p50_s"],
+        # streaming must keep tracking the offline engines, and the warm
+        # start must keep saving iterations (ratio is warm/cold medians;
+        # growing toward 1.0 means the warm start stopped paying)
+        "lower": [("aggregate.max_p999_rel_delta_vs_offline.p999_mlu", 0.02),
+                  ("aggregate.max_p999_rel_delta_vs_offline.p999_alu", 0.02),
+                  ("aggregate.warm_savings.overall.iters_ratio", 0.15)],
+        "higher": [("aggregate.n_decisions", 0)],
+    },
     "BENCH_failures.json": {
         "time": ["_wall_s"],
         # survivability is quality: the hedged class's worst-contingency
@@ -114,6 +135,7 @@ SPECS = {
 
 TIME_ABS_FLOOR_S = 1.0  # ignore sub-second jitter on tiny steps
 PHASE_ABS_FLOOR_S = 0.5  # phases are shorter than totals; keep some teeth
+LATENCY_ABS_FLOOR_S = 0.1  # per-decision latencies are ~10-100ms at --tiny
 
 
 def _get(d: dict, dotted: str):
@@ -139,7 +161,8 @@ def check(name: str, fresh: dict, base: dict,
     scale = _cal_scale(fresh, base)
     failures = []
     for kind, floor in (("time", TIME_ABS_FLOOR_S),
-                        ("phase_time", PHASE_ABS_FLOOR_S)):
+                        ("phase_time", PHASE_ABS_FLOOR_S),
+                        ("latency_slo", LATENCY_ABS_FLOOR_S)):
         for path in spec.get(kind, []):
             try:
                 f, b = float(_get(fresh, path)), float(_get(base, path))
@@ -214,6 +237,17 @@ def _self_test(baseline_dir: pathlib.Path, max_slowdown: float) -> int:
                 print(f"self-test FAIL: {name} accepts a 2x regression "
                       f"isolated to {path}")
                 ok = False
+        # a decision-latency regression with every wall-time total at
+        # baseline (the serve SLO gate's reason to exist)
+        for path in SPECS[name].get("latency_slo", []):
+            lagged = copy.deepcopy(base)
+            parent, leaf = path.rpartition(".")[::2]
+            node = _get(lagged, parent) if parent else lagged
+            node[leaf] = float(node[leaf]) * 2.0 + 2 * LATENCY_ABS_FLOOR_S
+            if not check(name, lagged, base, max_slowdown):
+                print(f"self-test FAIL: {name} accepts a 2x decision-latency "
+                      f"regression isolated to {path}")
+                ok = False
         for path, min_ratio in SPECS[name].get("achieved_fraction", []):
             dropped = copy.deepcopy(base)
             parent, leaf = path.rpartition(".")[::2]
@@ -242,6 +276,46 @@ def _self_test(baseline_dir: pathlib.Path, max_slowdown: float) -> int:
     return 0 if ok else 1
 
 
+def _check_baselines(baseline_dir: pathlib.Path) -> int:
+    """Schema check for the committed baselines: every ``BENCH_*.json``
+    under the baseline dir must parse, be registered in :data:`SPECS`, and
+    resolve every dotted path its spec gates on — and every registered spec
+    must have a committed baseline (a spec without one silently never
+    gates)."""
+    problems = []
+    names = sorted(p.name for p in baseline_dir.glob("BENCH_*.json"))
+    for name in names:
+        try:
+            base = json.loads((baseline_dir / name).read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            problems.append(f"{name}: unreadable baseline ({e})")
+            continue
+        spec = SPECS.get(name)
+        if spec is None:
+            problems.append(f"{name}: committed baseline has no spec "
+                            "registered in check_regression.SPECS")
+            continue
+        paths = list(spec.get("time", [])) + list(spec.get("phase_time", []))
+        paths += list(spec.get("latency_slo", []))
+        paths += [p for p, _ in spec.get("achieved_fraction", [])]
+        paths += [p for p, _ in spec.get("lower", [])]
+        paths += [p for p, _ in spec.get("higher", [])]
+        for path in paths:
+            try:
+                float(_get(base, path))
+            except (KeyError, TypeError, ValueError):
+                problems.append(f"{name}: spec path {path} does not resolve "
+                                "to a number in the committed baseline")
+        if not problems or not problems[-1].startswith(name):
+            print(f"baseline ok: {name} ({len(paths)} gated metrics)")
+    for name in sorted(set(SPECS) - set(names)):
+        problems.append(f"{name}: spec registered but no committed baseline "
+                        f"under {baseline_dir}")
+    for p in problems:
+        print(f"BASELINE SCHEMA: {p}", file=sys.stderr)
+    return 1 if problems else 0
+
+
 def main() -> int:
     import argparse
 
@@ -256,10 +330,16 @@ def main() -> int:
                          "checking (after an intentional perf change)")
     ap.add_argument("--self-test", action="store_true",
                     help="verify the gate fails on injected regressions")
+    ap.add_argument("--check-baselines", action="store_true",
+                    help="schema-check the committed baselines against SPECS "
+                         "(every baseline registered, every gated path "
+                         "resolvable, every spec backed by a baseline)")
     args = ap.parse_args()
 
     if args.self_test:
         return _self_test(args.baseline_dir, args.max_slowdown)
+    if args.check_baselines:
+        return _check_baselines(args.baseline_dir)
     if not args.fresh:
         ap.error("no fresh bench files given (or use --self-test)")
     failures = []

@@ -58,6 +58,18 @@ def main() -> None:
          f"solver={en['solver_seconds_speedup']}x;"
          f"max_p999_mlu_delta={en['max_p999_rel_delta']['p999_mlu']}")
 
+    # ---- streaming controller: online serve mode ------------------------------
+    from benchmarks import bench_serve
+
+    sv = bench_serve.run()["aggregate"]
+    emit("serve_streaming", 0.0,
+         f"intervals_per_s={sv['intervals_per_s']};"
+         f"p99_latency_s={sv['latency']['p99_s']};"
+         f"warm_cold_iters_ratio="
+         f"{sv['warm_savings']['overall']['iters_ratio']:.2f};"
+         f"max_p999_mlu_delta="
+         f"{sv['max_p999_rel_delta_vs_offline']['p999_mlu']}")
+
     # ---- reconfiguration transitions: §A/Thm. 4 + §4.6 decision --------------
     from benchmarks import bench_transition
 

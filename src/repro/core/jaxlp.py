@@ -62,7 +62,30 @@ from repro import obs
 from repro.core.graph import Fabric, directed_edge_index
 from repro.core.paths import PathSet, build_paths
 
-__all__ = ["JaxRoutingSolver", "project_simplex_rows"]
+__all__ = ["JaxRoutingSolver", "RoutingWarmState", "project_simplex_rows"]
+
+
+@dataclasses.dataclass
+class RoutingWarmState:
+    """Converged primal/dual iterates of one routing solve, reusable as the
+    next epoch's starting point (:meth:`JaxRoutingSolver.solve_routing_warm`).
+
+    The streaming controller's consecutive epochs share all but one window
+    interval, so the previous optimum is near-feasible and near-optimal for
+    the next solve — PDHG started there exits at (or near) its first
+    convergence check instead of re-deriving the solution from the uniform
+    cold start.  Stage-2/3 fields are ``None`` when the producing solve did
+    not run that stage (no hedging / ``skip_stage3``); a ``None`` field falls
+    back to the cold init for just that stage.  Arrays stay device-resident
+    (jax arrays) so carrying the state adds no host round-trips.
+    """
+
+    f1: object  # (V, V, V) stage-1 primal splits
+    y1: object  # (m, V, V) stage-1 dual
+    f2: object | None = None  # stage-2 primal splits
+    y2: object | None = None  # stage-2 MLU dual
+    z2: object | None = None  # stage-2 risk dual
+    y3: object | None = None  # stage-3 MLU dual
 
 
 def project_simplex_rows(x: jax.Array) -> jax.Array:
@@ -730,6 +753,96 @@ class JaxRoutingSolver:
         if active is not None:
             out["active"] = np.asarray(active, bool).reshape(-1)
         return out
+
+    # ---- single-epoch streaming solve, warm-started across epochs -----------
+
+    def solve_routing_warm(self, tms: np.ndarray, capacities: np.ndarray,
+                           hedging: bool, delta: float = 0.0,
+                           skip_stage3: bool = False,
+                           anchor_state: RoutingWarmState | None = None):
+        """Stages 1 → [2] → 3 for ONE routing epoch, warm-started from the
+        previous epoch's converged iterates.
+
+        This is the streaming-controller counterpart of
+        :meth:`solve_routing_batch`: instead of a batch anchored on a cold
+        middle-epoch solve, each epoch seeds every stage's primal *and* dual
+        from ``anchor_state`` (the state returned by the previous call).
+        Convergence is unchanged — the duality-gap certificate / feasibility
+        checks gate the exit exactly as in the cold path, so the result
+        matches a cold solve to solver tolerance (test-enforced); only the
+        iteration count drops.
+
+        Reuses the ``*_batch`` jitted programs at ``B = 1``, so a process that
+        already ran the batched engine pays no extra compiles.
+
+        Args:
+          tms: (m, C) critical TMs, zero-padded to the static ``m``.
+          capacities: (E,) realized directed capacities.
+          hedging: run stage 2 when ``delta > 0``.
+          delta: burst size (ignored unless ``hedging``).
+          skip_stage3: skip the stretch-minimization stage.
+          anchor_state: previous epoch's :class:`RoutingWarmState`, or None
+            for a cold start (first epoch / topology change invalidating the
+            carried iterates).
+
+        Returns ``(out, state)``: ``out`` has ``f`` (P,), ``u_star``,
+        ``r_star`` (None unless hedged), and ``stats`` (raw per-stage
+        telemetry in the :meth:`solve_routing_batch` schema, batch length 1);
+        ``state`` seeds the next call.
+        """
+        d3 = self._dense_tms(tms)[None]
+        ic = self._dense_inv_cap(capacities)[None]
+        valid_b = self._tile_valid(1)
+
+        def one(x):
+            return jnp.asarray(x)[None]
+
+        with obs.span("jaxlp.warm_stage1"):
+            if anchor_state is None:
+                f3, u, it1, y1, gap1 = self._solve_mlu_batch(d3, ic, valid_b)
+            else:
+                f3, u, it1, y1, gap1 = self._solve_mlu_batch_warm(
+                    d3, ic, valid_b, one(anchor_state.f1), one(anchor_state.y1))
+        state = RoutingWarmState(f1=f3[0], y1=y1[0])
+        u_budget = jnp.asarray(u) * 1.005 + 1e-9
+        stats = {"stage1": self._stage_stats(it1, gap1),
+                 "anchor_seconds": 0.0}
+        r_star = None
+        run2 = hedging and delta > 0
+        if run2:
+            dl = jnp.asarray([delta], jnp.float32)
+            with obs.span("jaxlp.warm_stage2"):
+                if anchor_state is None or anchor_state.f2 is None:
+                    f3r, r, _, y2, z2, it2, gap2 = self._solve_risk_batch(
+                        d3, ic, valid_b, u_budget, dl)
+                else:
+                    f3r, r, _, y2, z2, it2, gap2 = self._solve_risk_batch_warm(
+                        d3, ic, valid_b, u_budget, dl,
+                        one(anchor_state.f2), one(anchor_state.y2),
+                        one(anchor_state.z2))
+            f3 = f3r
+            state.f2, state.y2, state.z2 = f3r[0], y2[0], z2[0]
+            r_star = float(np.asarray(r)[0])
+            stats["stage2"] = self._stage_stats(it2, gap2,
+                                                active=np.asarray([True]))
+        if not skip_stage3:
+            r_in = jnp.asarray([r_star * 1.005 + 1e-12 if run2 else 1e9],
+                               jnp.float32)
+            dl_in = jnp.asarray([delta if run2 else 0.0], jnp.float32)
+            f3 = jnp.asarray(f3)
+            with obs.span("jaxlp.warm_stage3"):
+                if anchor_state is None or anchor_state.y3 is None:
+                    f3, y3, it3, gap3 = self._solve_stretch_batch(
+                        d3, ic, valid_b, u_budget, r_in, dl_in, f3)
+                else:
+                    f3, y3, it3, gap3 = self._solve_stretch_batch_warm(
+                        d3, ic, valid_b, u_budget, r_in, dl_in, f3,
+                        one(anchor_state.y3))
+            state.y3 = y3[0]
+            stats["stage3"] = self._stage_stats(it3, gap3)
+        f = self._flat_f(np.asarray(f3))[0]
+        return ({"f": f, "u_star": float(np.asarray(u)[0]), "r_star": r_star,
+                 "stats": stats}, state)
 
     # ---- fleet batch: many fabrics (padded to this solver's V) at once ------
 

@@ -22,7 +22,7 @@ from repro.core.solver import STRATEGIES, SolverConfig, Strategy
 from repro.core.traffic import Trace
 from repro.obs import audit, metrics
 
-__all__ = ["Prediction", "predict", "pick_best"]
+__all__ = ["Prediction", "predict", "predict_from_window", "pick_best"]
 
 # summary keys the operator objective can consume — the audit record keeps
 # exactly these per strategy, which makes the record replayable on its own
@@ -166,3 +166,44 @@ def predict(
               strategy=choice, hedging=by_name[choice].hedging)
     return Prediction(fabric=fabric.name, strategy=by_name[choice],
                       per_strategy=per, cushion=cushion)
+
+
+def predict_from_window(
+    fabric: Fabric,
+    window,
+    interval_minutes: float,
+    cc: ControllerConfig | None = None,
+    sc: SolverConfig | None = None,
+    cushion: float = 0.05,
+    strategies: tuple = STRATEGIES,
+    objective: str = "mlu",
+    contingency_weight: float | None = None,
+    min_epochs: int = 2,
+) -> Prediction:
+    """:func:`predict` over a raw demand window instead of a full trace.
+
+    The streaming controller's warm-up buffer is exactly one aggregation
+    window of intervals — too short to replay under the production
+    ``aggregation_days`` (the inner simulation would have no scored epochs).
+    The window is wrapped into a :class:`Trace` and replayed with the
+    aggregation shrunk so at least ``min_epochs`` routing epochs survive
+    warm-up; every other knob of ``cc`` is inherited unchanged.
+    """
+    import numpy as np
+
+    window = np.asarray(window)
+    cc = cc or ControllerConfig()
+    ipd = int(round(24 * 60 / interval_minutes))
+    route_step = max(1, int(round(cc.routing_interval_hours * ipd / 24.0)))
+    # largest inner warm-up leaving >= min_epochs scored routing epochs
+    inner_agg = max(route_step, window.shape[0] - min_epochs * route_step)
+    if inner_agg >= window.shape[0]:
+        raise ValueError(
+            f"window of {window.shape[0]} intervals is too short to simulate "
+            f"even one routing epoch (route_step={route_step})")
+    cc_inner = dataclasses.replace(cc, aggregation_days=inner_agg / ipd)
+    training = Trace(name=f"{fabric.name}-warmup", demand=window,
+                     interval_minutes=interval_minutes, n_pods=fabric.n_pods)
+    return predict(fabric, training, cc_inner, sc, cushion=cushion,
+                   strategies=strategies, objective=objective,
+                   contingency_weight=contingency_weight)

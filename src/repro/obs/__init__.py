@@ -34,7 +34,8 @@ every numeric result bit-identical, test-enforced):
 """
 
 from . import audit, metrics, quality
-from .stats import SolverStats, StageStats, slice_raw_stats
+from .stats import (SolverStats, StageStats, slice_raw_stats,
+                    warm_start_savings)
 from .trace import (PhaseTimes, capacity, chrome_trace_events, clear, counter,
                     disable, dropped, enable, enabled, event, events,
                     export_chrome_trace, export_jsonl, read_jsonl, span,
@@ -44,6 +45,6 @@ __all__ = [
     "enable", "disable", "enabled", "clear", "capacity", "dropped", "span",
     "timed", "event", "counter", "events", "PhaseTimes", "export_jsonl",
     "export_chrome_trace", "read_jsonl", "chrome_trace_events",
-    "SolverStats", "StageStats", "slice_raw_stats",
+    "SolverStats", "StageStats", "slice_raw_stats", "warm_start_savings",
     "audit", "metrics", "quality",
 ]

@@ -28,7 +28,8 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["StageStats", "SolverStats", "slice_raw_stats"]
+__all__ = ["StageStats", "SolverStats", "slice_raw_stats",
+           "warm_start_savings"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +156,35 @@ class SolverStats:
                    tol=max(p.tol for p in parts), stages=stages,
                    anchor_seconds=sum(p.anchor_seconds for p in parts),
                    n_fallbacks=sum(p.n_fallbacks for p in parts))
+
+
+def warm_start_savings(warm: SolverStats, cold: SolverStats) -> dict:
+    """Per-stage PDHG iteration savings of a warm-started sweep vs a cold one.
+
+    The streaming controller's headline solver win (carrying each epoch's
+    primal/dual iterates into the next solve) shows up as a drop in median
+    iterations per stage; this pairs the two :class:`SolverStats` into the
+    dict the serve bench emits and the regression gate reads::
+
+        {"stage1": {"warm_median_iters": ..., "cold_median_iters": ...,
+                    "iters_ratio": warm/cold}, ..., "overall": {...}}
+
+    Stages present in only one of the two runs are skipped (e.g. hedging
+    active on one side only).  ``iters_ratio < 1`` means the warm start
+    saved work.
+    """
+    out: dict = {}
+    tw = tc = 0.0
+    for name in sorted(set(warm.stages) & set(cold.stages)):
+        w = float(np.median(np.asarray(warm.stages[name].iters, np.float64)))
+        c = float(np.median(np.asarray(cold.stages[name].iters, np.float64)))
+        out[name] = {"warm_median_iters": w, "cold_median_iters": c,
+                     "iters_ratio": w / max(c, 1.0)}
+        tw += w
+        tc += c
+    out["overall"] = {"warm_median_iters": tw, "cold_median_iters": tc,
+                      "iters_ratio": tw / max(tc, 1.0)}
+    return out
 
 
 def slice_raw_stats(raw: dict, lo: int, hi: int,

@@ -124,7 +124,7 @@ def test_phase_floor_ignores_subsecond_jitter():
 def test_specs_cover_all_gated_artifacts():
     assert set(SPECS) == {"BENCH_engine.json", "BENCH_transition.json",
                           "BENCH_fleet.json", "BENCH_failures.json",
-                          "BENCH_roofline.json"}
+                          "BENCH_roofline.json", "BENCH_serve.json"}
     for spec in SPECS.values():
         assert spec["time"], "every gated bench needs a wall-time metric"
 
